@@ -1,0 +1,208 @@
+"""Baseline dynamic-graph structures the paper compares against, implemented
+uniformly in JAX (the paper's own methodology for Fig. 1: "uniformly
+implemented simple data structures").
+
+  * CSRGraph — fully contiguous (the static-graph gold standard): fastest
+    scans, O(E) rebuild per update batch (PCSR/Teseo family stand-in).
+  * ALGraph — per-edge linked list (adjacency list): O(1) insert at head,
+    pointer-chased traversal (node = one edge), the GraphOne/LiveGraph-like
+    fragmented extreme.
+  * CBList — the paper's structure (repro.core).
+
+All three expose: build, edge queries, one PageRank sweep, batch insert.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# CSR
+# ---------------------------------------------------------------------------
+
+class CSRGraph(NamedTuple):
+    offsets: jax.Array    # i32[NV+1]
+    indices: jax.Array    # i32[E] sorted within row
+    weights: jax.Array    # f32[E]
+    nv: int               # static (kept out of jitted signatures)
+
+
+def csr_build(src, dst, w, nv) -> CSRGraph:
+    order = jnp.lexsort((dst, src))
+    s, d, ww = src[order], dst[order], w[order]
+    counts = jax.ops.segment_sum(jnp.ones_like(s), s, num_segments=nv)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts).astype(jnp.int32)])
+    return CSRGraph(offsets, d, ww, nv)
+
+
+@functools.partial(jax.jit, static_argnames=("nv",))
+def _csr_query(offsets, indices, weights, qs, qd, *, nv):
+    g = CSRGraph(offsets, indices, weights, nv)
+    return _csr_query_impl(g, qs, qd)
+
+
+def csr_query(g: CSRGraph, qs, qd):
+    return _csr_query(g.offsets, g.indices, g.weights, qs, qd, nv=g.nv)
+
+
+def _csr_query_impl(g: CSRGraph, qs, qd):
+    """Binary search within each row's [offsets[s], offsets[s+1]) range."""
+    lo = g.offsets[qs]
+    hi = g.offsets[qs + 1]
+
+    def bisect(l, h, d):
+        def body(state):
+            lo_, hi_ = state
+            mid = (lo_ + hi_) // 2
+            v = g.indices[jnp.minimum(mid, g.indices.shape[0] - 1)]
+            go_right = v < d
+            return (jnp.where(go_right, mid + 1, lo_),
+                    jnp.where(go_right, hi_, mid))
+        lo_, hi_ = jax.lax.while_loop(lambda s: s[0] < s[1], body, (l, h))
+        found = (lo_ < h) & (g.indices[jnp.minimum(lo_, g.indices.shape[0] - 1)] == d)
+        return found, jnp.where(found, g.weights[jnp.minimum(lo_, g.weights.shape[0] - 1)], 0.0)
+    return jax.vmap(bisect)(lo, hi, qd)
+
+
+@functools.partial(jax.jit, static_argnames=("nv",))
+def _csr_sweep(offsets, indices, weights, x, *, nv):
+    g = CSRGraph(offsets, indices, weights, nv)
+    return _csr_sweep_impl(g, x)
+
+
+def csr_pagerank_sweep(g: CSRGraph, x):
+    return _csr_sweep(g.offsets, g.indices, g.weights, x, nv=g.nv)
+
+
+def _csr_sweep_impl(g: CSRGraph, x):
+    """One push sweep y[dst] += x[src]*w over the contiguous edge array."""
+    row = jnp.searchsorted(g.offsets, jnp.arange(g.indices.shape[0]),
+                           side="right") - 1
+    msg = x[row] * g.weights
+    return jax.ops.segment_sum(msg, g.indices, num_segments=g.nv)
+
+
+def csr_insert_batch(g: CSRGraph, src, dst, w) -> CSRGraph:
+    """Full rebuild (contiguity means O(E) data movement — the paper's point)."""
+    all_src = jnp.concatenate([
+        jnp.searchsorted(g.offsets, jnp.arange(g.indices.shape[0]),
+                         side="right").astype(jnp.int32) - 1, src])
+    all_dst = jnp.concatenate([g.indices, dst])
+    all_w = jnp.concatenate([g.weights, w])
+    return csr_build(all_src, all_dst, all_w, g.nv)
+
+
+# ---------------------------------------------------------------------------
+# AL (per-edge linked list)
+# ---------------------------------------------------------------------------
+
+class ALGraph(NamedTuple):
+    head: jax.Array     # i32[NV] first edge node (-1)
+    nxt: jax.Array      # i32[CAP]
+    dst: jax.Array      # i32[CAP]
+    w: jax.Array        # f32[CAP]
+    n_edges: jax.Array  # i32[]
+    nv: int             # static
+
+
+def al_build(src, dst, w, nv, cap) -> ALGraph:
+    head = np.full(nv, -1, np.int32)
+    nxt = np.full(cap, -1, np.int32)
+    dd = np.zeros(cap, np.int32)
+    ww = np.zeros(cap, np.float32)
+    s, d, wv = np.asarray(src), np.asarray(dst), np.asarray(w)
+    for i in range(len(s)):
+        dd[i] = d[i]
+        ww[i] = wv[i]
+        nxt[i] = head[s[i]]
+        head[s[i]] = i
+    return ALGraph(jnp.asarray(head), jnp.asarray(nxt), jnp.asarray(dd),
+                   jnp.asarray(ww), jnp.asarray(len(s), jnp.int32), nv)
+
+
+@functools.partial(jax.jit, static_argnames=("nv",))
+def _al_query(head, nxt, dst, w, n_edges, qs, qd, *, nv):
+    g = ALGraph(head, nxt, dst, w, n_edges, nv)
+    return _al_query_impl(g, qs, qd)
+
+
+def al_query(g: ALGraph, qs, qd):
+    return _al_query(g.head, g.nxt, g.dst, g.w, g.n_edges, qs, qd, nv=g.nv)
+
+
+def _al_query_impl(g: ALGraph, qs, qd):
+    """Walk each source's list until dst found — pure pointer chasing."""
+    def walk(s, d):
+        def body(state):
+            cur, found, wv = state
+            safe = jnp.maximum(cur, 0)
+            hit = (cur >= 0) & (g.dst[safe] == d)
+            return (jnp.where(hit | (cur < 0), -1, g.nxt[safe]),
+                    found | hit,
+                    jnp.where(hit, g.w[safe], wv))
+        return jax.lax.while_loop(lambda st: st[0] >= 0, body,
+                                  (g.head[s], False, 0.0))[1:]
+    return jax.vmap(walk)(qs, qd)
+
+
+@functools.partial(jax.jit, static_argnames=("nv",))
+def _al_sweep(head, nxt, dst, w, n_edges, x, *, nv):
+    g = ALGraph(head, nxt, dst, w, n_edges, nv)
+    return _al_sweep_impl(g, x)
+
+
+def al_pagerank_sweep(g: ALGraph, x):
+    return _al_sweep(g.head, g.nxt, g.dst, g.w, g.n_edges, x, nv=g.nv)
+
+
+def _al_sweep_impl(g: ALGraph, x):
+    """Whole-graph sweep by chasing every vertex's list in lockstep.
+
+    Each iteration advances one edge per vertex -> max-degree iterations;
+    this is the skew-driven load imbalance the paper's GTChain partition
+    removes (and the pointer-chase each step is the cache-miss source).
+    """
+    def cond(state):
+        return jnp.any(state[0] >= 0)
+
+    def body(state):
+        cur, acc = state
+        safe = jnp.maximum(cur, 0)
+        live = cur >= 0
+        contrib = jnp.where(live, x * g.w[safe], 0.0)
+        acc = acc.at[jnp.where(live, g.dst[safe], g.nv)].add(
+            contrib, mode="drop")
+        return (jnp.where(live, g.nxt[safe], -1), acc)
+
+    _, acc = jax.lax.while_loop(
+        cond, body, (g.head, jnp.zeros((g.nv,), jnp.float32)))
+    return acc
+
+
+def al_insert_batch(g: ALGraph, src, dst, w) -> ALGraph:
+    """O(1) head insertion per edge (vectorized over the batch)."""
+    n = src.shape[0]
+    base = g.n_edges
+    idx = base + jnp.arange(n, dtype=jnp.int32)
+    # within-batch chains: later edge of same src points to earlier one
+    order = jnp.argsort(src, stable=True)
+    s_sorted = src[order]
+    first_in_batch = jnp.concatenate([jnp.ones((1,), bool),
+                                      s_sorted[1:] != s_sorted[:-1]])
+    prev_same = jnp.where(first_in_batch, g.head[s_sorted],
+                          jnp.concatenate([idx[:1] * 0 - 1, idx[order][:-1]]))
+    nxt = g.nxt.at[idx[order]].set(prev_same, mode="drop")
+    dst_a = g.dst.at[idx].set(dst, mode="drop")
+    w_a = g.w.at[idx].set(w, mode="drop")
+    # head points at the LAST batch edge per src
+    last_in_batch = jnp.concatenate([s_sorted[1:] != s_sorted[:-1],
+                                     jnp.ones((1,), bool)])
+    head = g.head.at[jnp.where(last_in_batch, s_sorted, g.nv)].set(
+        jnp.where(last_in_batch, idx[order], -1), mode="drop")
+    return ALGraph(head, nxt, dst_a, w_a, base + n, g.nv)

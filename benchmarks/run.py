@@ -1,0 +1,45 @@
+"""Benchmark harness: one bench per paper table/figure + roofline report.
+
+Prints ``name,us_per_call,derived`` CSV.  Scale with REPRO_BENCH_SCALE
+(default 1.0; CI can use 0.25).
+
+  Fig 10 -> bench_query      Fig 11 -> bench_analysis
+  Fig 12 -> bench_update     Fig 13 -> bench_batchsize
+  Fig 14 / Table 3 -> bench_interleave
+  §Roofline (dry-run derived) -> roofline (requires experiments/dryrun/)
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_analysis, bench_batchsize, bench_interleave,
+                            bench_query, bench_update)
+    print("name,us_per_call,derived")
+    ok = True
+    for mod in (bench_query, bench_analysis, bench_update, bench_batchsize,
+                bench_interleave):
+        try:
+            mod.run()
+        except Exception:
+            ok = False
+            print(f"{mod.__name__},FAILED,", file=sys.stderr)
+            traceback.print_exc()
+    try:
+        from pathlib import Path
+
+        from benchmarks import roofline
+        if Path("experiments/dryrun").exists():
+            roofline.run()
+        else:
+            print("roofline,skipped,no experiments/dryrun (run "
+                  "python -m repro.launch.dryrun --all first)")
+    except Exception:
+        ok = False
+        traceback.print_exc()
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""gemma2-27b [arXiv:2408.00118]: 46L d=4608 32H (GQA kv=16) d_ff=36864
+vocab 256000; local(4096)+global alternating; attn softcap 50, final 30;
+head_dim 128 (HF).  Hybrid local/global -> long_500k RUNS (decode O(S))."""
+import jax.numpy as jnp
+from repro.models.transformer.layers import LMConfig
+
+FAMILY = "lm"
+SKIP_SHAPES = {}
+
+
+def full_config() -> LMConfig:
+    return LMConfig(name="gemma2-27b", n_layers=46, d_model=4608, n_heads=32,
+                    n_kv_heads=16, d_head=128, d_ff=36864, vocab=256000,
+                    window_pattern=(4096, 0), attn_softcap=50.0,
+                    final_softcap=30.0, dtype=jnp.bfloat16)
+
+
+def smoke_config() -> LMConfig:
+    return LMConfig(name="gemma2-smoke", n_layers=4, d_model=64, n_heads=4,
+                    n_kv_heads=2, d_head=16, d_ff=128, vocab=256,
+                    window_pattern=(8, 0), attn_softcap=50.0,
+                    final_softcap=30.0, dtype=jnp.float32)

@@ -1,0 +1,21 @@
+"""gemma3-27b [hf:google/gemma-3-27b-pt lineage]: 62L d=5376 32H (GQA kv=16)
+d_ff=21504 vocab 262144; 5:1 local(1024):global pattern, 128k context,
+head_dim 128.  Hybrid -> long_500k RUNS (sequence-sharded decode)."""
+import jax.numpy as jnp
+from repro.models.transformer.layers import LMConfig
+
+FAMILY = "lm"
+SKIP_SHAPES = {}
+
+
+def full_config() -> LMConfig:
+    return LMConfig(name="gemma3-27b", n_layers=62, d_model=5376, n_heads=32,
+                    n_kv_heads=16, d_head=128, d_ff=21504, vocab=262144,
+                    window_pattern=(1024, 1024, 1024, 1024, 1024, 0),
+                    rope_theta=1e6, dtype=jnp.bfloat16)
+
+
+def smoke_config() -> LMConfig:
+    return LMConfig(name="gemma3-smoke", n_layers=7, d_model=64, n_heads=4,
+                    n_kv_heads=2, d_head=16, d_ff=128, vocab=256,
+                    window_pattern=(8, 8, 0), dtype=jnp.float32)

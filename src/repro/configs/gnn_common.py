@@ -1,0 +1,41 @@
+"""Shared GNN shape table (shapes assigned to the GNN family).
+
+d_feat / n_classes per shape: full_graph_sm = Cora (1433 feat, 7 classes);
+minibatch_lg = Reddit-scale sampled training (602 feat, 41 classes,
+fanout 15-10 from 1024 seed nodes); ogb_products (100 feat, 47 classes);
+molecule = batched 30-node graphs, graph-level regression.
+Geometric models (egnn / equiformer-v2) receive synthetic 3D positions for
+the citation-graph shapes (stub noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# capacities padded to multiples of 512 so every mesh axis divides evenly;
+# live counts (Cora 2708/10556, sampled-Reddit 170368/168960, ogb-products
+# 2449029/61859140, molecule 3840/8192) ride inside via the valid masks.
+GNN_SHAPES = {
+    #                n_nodes     n_edges      d_feat n_cls graph_lvl n_graphs
+    "full_graph_sm": (3_072,     10_752,      1433,  7,    False,    1),
+    "minibatch_lg":  (170_496,   168_960,     602,   41,   False,    1),
+    "ogb_products":  (2_449_408, 61_859_840,  100,   47,   False,    1),
+    "molecule":      (4_096,     8_192,       64,    1,    True,     128),
+}
+
+
+def graph_specs(shape_name: str, with_pos: bool):
+    n, e, f, ncls, glvl, ng = GNN_SHAPES[shape_name]
+    spec = {
+        "x": jax.ShapeDtypeStruct((n, f), jnp.float32),
+        "edge_src": jax.ShapeDtypeStruct((e,), jnp.int32),
+        "edge_dst": jax.ShapeDtypeStruct((e,), jnp.int32),
+        "edge_valid": jax.ShapeDtypeStruct((e,), jnp.bool_),
+        "node_valid": jax.ShapeDtypeStruct((n,), jnp.bool_),
+        "graph_id": jax.ShapeDtypeStruct((n,), jnp.int32),
+        "pos": (jax.ShapeDtypeStruct((n, 3), jnp.float32) if with_pos else None),
+        "edge_attr": None,
+        "labels": (jax.ShapeDtypeStruct((ng,), jnp.float32) if glvl
+                   else jax.ShapeDtypeStruct((n,), jnp.int32)),
+    }
+    return spec, (f, ncls, glvl)

@@ -1,0 +1,28 @@
+"""kimi-k2-1t-a32b [arXiv:2501.kimi2, paper-table]: 61L d=7168 64H (GQA kv=8)
+MoE 384 experts top-8, expert d_ff=2048, vocab 163840.
+Adaptations (DESIGN.md §7): head_dim 128 (assignment table gives GQA, not
+MLA; 7168/64=112 padded to the 128 MXU tile), +1 shared expert
+(DeepSeek-lineage arch).  Pure full attention -> long_500k skipped.
+Optimizer state is 8-bit quantized (1T params; see optim/adamw.py)."""
+import jax.numpy as jnp
+from repro.models.transformer.layers import LMConfig
+
+FAMILY = "lm"
+SKIP_SHAPES = {"long_500k": "pure full-attention arch (per assignment brief)"}
+QUANTIZED_OPT = True
+
+
+def full_config() -> LMConfig:
+    return LMConfig(name="kimi-k2-1t-a32b", n_layers=61, d_model=7168,
+                    n_heads=64, n_kv_heads=8, d_head=128, d_ff=2048,
+                    vocab=163840, moe=True, n_experts=384, top_k=8,
+                    n_shared_experts=1, window_pattern=(0,), rope_theta=1e6,
+                    dtype=jnp.bfloat16)
+
+
+def smoke_config() -> LMConfig:
+    return LMConfig(name="kimi-k2-smoke", n_layers=2, d_model=64, n_heads=4,
+                    n_kv_heads=2, d_head=16, d_ff=32, vocab=256, moe=True,
+                    n_experts=8, top_k=2, n_shared_experts=1,
+                    capacity_factor=8.0, window_pattern=(0,),
+                    dtype=jnp.float32)

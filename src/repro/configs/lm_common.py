@@ -1,0 +1,30 @@
+"""Shared LM shape table + spec builders (shapes assigned to the LM family)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# shape name -> (seq_len, global_batch, kind)
+LM_SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def token_specs(seq: int, batch: int):
+    return {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+
+
+def decode_specs(cfg, seq: int, batch: int):
+    cache = {
+        "k": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, cfg.n_kv_heads, seq, cfg.head_dim), cfg.dtype),
+        "v": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, cfg.n_kv_heads, seq, cfg.head_dim), cfg.dtype),
+        "lengths": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+    return {"cache": cache,
+            "tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}

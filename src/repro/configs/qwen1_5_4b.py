@@ -1,0 +1,20 @@
+"""qwen1.5-4b [hf:Qwen/Qwen1.5-4B]: 40L d=2560 20H (MHA kv=20) d_ff=6912
+vocab 151936, QKV bias, head_dim 128.  Pure full attention -> long_500k
+skipped."""
+import jax.numpy as jnp
+from repro.models.transformer.layers import LMConfig
+
+FAMILY = "lm"
+SKIP_SHAPES = {"long_500k": "pure full-attention arch (per assignment brief)"}
+
+
+def full_config() -> LMConfig:
+    return LMConfig(name="qwen1.5-4b", n_layers=40, d_model=2560, n_heads=20,
+                    n_kv_heads=20, d_head=128, d_ff=6912, vocab=151936,
+                    qkv_bias=True, window_pattern=(0,), dtype=jnp.bfloat16)
+
+
+def smoke_config() -> LMConfig:
+    return LMConfig(name="qwen1.5-smoke", n_layers=2, d_model=64, n_heads=4,
+                    n_kv_heads=4, d_head=16, d_ff=128, vocab=256,
+                    qkv_bias=True, window_pattern=(0,), dtype=jnp.float32)

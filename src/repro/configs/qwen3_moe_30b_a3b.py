@@ -1,0 +1,22 @@
+"""qwen3-moe-30b-a3b [hf:Qwen/Qwen3-30B-A3B]: 48L d=2048 32H (GQA kv=4)
+MoE 128 experts top-8, expert d_ff=768, vocab 151936, head_dim 128 (HF).
+Pure full attention -> long_500k skipped (DESIGN.md §5)."""
+import jax.numpy as jnp
+from repro.models.transformer.layers import LMConfig
+
+FAMILY = "lm"
+SKIP_SHAPES = {"long_500k": "pure full-attention arch (per assignment brief)"}
+
+
+def full_config() -> LMConfig:
+    return LMConfig(name="qwen3-moe-30b-a3b", n_layers=48, d_model=2048,
+                    n_heads=32, n_kv_heads=4, d_head=128, d_ff=768,
+                    vocab=151936, moe=True, n_experts=128, top_k=8,
+                    window_pattern=(0,), rope_theta=1e6, dtype=jnp.bfloat16)
+
+
+def smoke_config() -> LMConfig:
+    return LMConfig(name="qwen3-moe-smoke", n_layers=2, d_model=64, n_heads=4,
+                    n_kv_heads=2, d_head=16, d_ff=32, vocab=256, moe=True,
+                    n_experts=8, top_k=2, capacity_factor=8.0,
+                    window_pattern=(0,), dtype=jnp.float32)

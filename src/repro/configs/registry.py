@@ -1,0 +1,249 @@
+"""Arch x shape cell registry: the 40-cell matrix of the assignment.
+
+``build_cell(arch, shape)`` returns the step function plus abstract
+(ShapeDtypeStruct) argument specs — everything the multi-pod dry-run needs
+to ``jit(...).lower(...).compile()`` without allocating a byte.  Param and
+optimizer specs come from ``jax.eval_shape`` over the real initializers, so
+the dry-run measures exactly what training would allocate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import importlib
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import lm_common, gnn_common
+from repro.models.gnn.common import GraphBatch
+from repro.optim import AdamWConfig, adamw_update, clip_by_global_norm, init_opt_state
+
+ARCH_MODULES = {
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    "gemma2-27b": "repro.configs.gemma2_27b",
+    "qwen1.5-4b": "repro.configs.qwen1_5_4b",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "gin-tu": "repro.configs.gin_tu",
+    "equiformer-v2": "repro.configs.equiformer_v2",
+    "egnn": "repro.configs.egnn",
+    "pna": "repro.configs.pna",
+    "sasrec": "repro.configs.sasrec",
+}
+
+GNN_MODEL_MODULES = {
+    "gin": "repro.models.gnn.gin",
+    "pna": "repro.models.gnn.pna",
+    "egnn": "repro.models.gnn.egnn",
+    "equiformer_v2": "repro.models.gnn.equiformer_v2",
+}
+
+
+class Cell(NamedTuple):
+    arch: str
+    shape: str
+    kind: str                    # train | prefill | decode | serve | retrieval
+    skip_reason: Optional[str]
+
+
+class CellBuild(NamedTuple):
+    arch: str
+    shape: str
+    kind: str
+    family: str
+    cfg: Any
+    step_fn: Callable            # positional args matching arg_specs
+    arg_specs: Tuple             # pytrees of ShapeDtypeStruct
+    quantized_opt: bool
+    opt: str = ""                # "" baseline | "pod" | "multipod" (SPMD opt)
+
+
+def _mod(arch: str):
+    return importlib.import_module(ARCH_MODULES[arch])
+
+
+def arch_ids() -> List[str]:
+    return list(ARCH_MODULES)
+
+
+def shapes_for(arch: str) -> List[str]:
+    fam = _mod(arch).FAMILY
+    if fam == "lm":
+        return list(lm_common.LM_SHAPES)
+    if fam == "gnn":
+        return list(gnn_common.GNN_SHAPES)
+    return list(_mod(arch).RECSYS_SHAPES)
+
+
+def list_cells() -> List[Cell]:
+    cells = []
+    for arch in arch_ids():
+        m = _mod(arch)
+        for shape in shapes_for(arch):
+            skip = m.SKIP_SHAPES.get(shape)
+            if m.FAMILY == "lm":
+                kind = lm_common.LM_SHAPES[shape][2]
+            elif m.FAMILY == "gnn":
+                kind = "train"
+            else:
+                kind = m.RECSYS_SHAPES[shape]["kind"]
+            cells.append(Cell(arch, shape, kind, skip))
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def _lm_train_step(cfg, opt_cfg: AdamWConfig):
+    from repro.models.transformer import model as M
+
+    def step(params, opt_state, batch):
+        def lf(p):
+            return M.loss_fn(p, cfg, batch["tokens"], batch["labels"])
+        loss, grads = jax.value_and_grad(lf)(params)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = adamw_update(params, grads, opt_state, opt_cfg)
+        return loss, gnorm, params, opt_state
+
+    return step
+
+
+def _lm_prefill_step(cfg):
+    from repro.models.transformer import model as M
+
+    def step(params, batch):
+        logits, cache = M.prefill(params, cfg, batch["tokens"])
+        return logits, cache
+
+    return step
+
+
+def _lm_decode_step(cfg):
+    from repro.models.transformer import model as M
+
+    def step(params, batch):
+        return M.serve_step(params, cfg, batch["cache"], batch["tokens"])
+
+    return step
+
+
+def _gnn_train_step(cfg, module_name: str, opt_cfg: AdamWConfig):
+    mod = importlib.import_module(GNN_MODEL_MODULES[module_name])
+
+    def step(params, opt_state, batch):
+        g = GraphBatch(**batch)
+        loss, grads = jax.value_and_grad(
+            lambda p: mod.loss_fn(p, cfg, g))(params)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = adamw_update(params, grads, opt_state, opt_cfg)
+        return loss, gnorm, params, opt_state
+
+    return step
+
+
+def _sasrec_steps(cfg, kind: str, opt_cfg: AdamWConfig):
+    from repro.models.recsys import sasrec as S
+    if kind == "train":
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: S.loss_fn(p, cfg, batch["seq"], batch["pos"],
+                                    batch["neg"]))(params)
+            grads, gnorm = clip_by_global_norm(grads, 1.0)
+            params, opt_state = adamw_update(params, grads, opt_state, opt_cfg)
+            return loss, gnorm, params, opt_state
+        return step
+    if kind == "retrieval":
+        def step(params, batch):
+            return S.score_candidates(params, cfg, batch["seq"],
+                                      batch["candidates"])
+        return step
+
+    def step(params, batch):
+        return S.serve_step(params, cfg, batch["seq"])
+    return step
+
+
+# ---------------------------------------------------------------------------
+# cell assembly
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def build_cell(arch: str, shape: str, opt: str = "") -> CellBuild:
+    """opt: "" = paper-faithful baseline shardings; "pod"/"multipod" = the
+    beyond-paper SPMD-optimized variant (EXPERIMENTS.md §Perf) with
+    activation/dispatch sharding constraints for that mesh."""
+    m = _mod(arch)
+    fam = m.FAMILY
+    if shape in m.SKIP_SHAPES:
+        raise ValueError(f"{arch} x {shape} skipped: {m.SKIP_SHAPES[shape]}")
+    qopt = getattr(m, "QUANTIZED_OPT", False)
+    opt_cfg = AdamWConfig(quantized_state=qopt)
+
+    if fam == "lm":
+        from repro.models.transformer import model as M
+        cfg = m.full_config()
+        if opt:
+            cfg = dataclasses.replace(
+                cfg,
+                act_shard_axes=(("pod", "data") if opt == "multipod"
+                                else ("data",)),
+                data_axis_size=(32 if opt == "multipod" else 16),
+                ep_shard_map=cfg.moe)
+        seq, batch, kind = lm_common.LM_SHAPES[shape]
+        params_spec = jax.eval_shape(
+            lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+        if kind == "train":
+            opt_spec = jax.eval_shape(
+                lambda p: init_opt_state(p, opt_cfg), params_spec)
+            step = _lm_train_step(cfg, opt_cfg)
+            specs = (params_spec, opt_spec, lm_common.token_specs(seq, batch))
+        elif kind == "prefill":
+            step = _lm_prefill_step(cfg)
+            specs = (params_spec,
+                     {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)})
+        else:
+            step = _lm_decode_step(cfg)
+            specs = (params_spec, lm_common.decode_specs(cfg, seq, batch))
+        return CellBuild(arch, shape, kind, fam, cfg, step, specs, qopt,
+                         opt)
+
+    if fam == "gnn":
+        mod = importlib.import_module(GNN_MODEL_MODULES[m.MODULE])
+        g_spec, (d_feat, n_cls, glvl) = gnn_common.graph_specs(
+            shape, with_pos=m.NEEDS_POS)
+        if not m.NEEDS_POS:
+            g_spec = dict(g_spec, pos=None)
+        cfg = m.full_config(d_in=d_feat,
+                            n_classes=(1 if glvl else n_cls),
+                            graph_level=glvl)
+        if opt and hasattr(cfg, "truncate_rotation"):
+            cfg = dataclasses.replace(cfg, truncate_rotation=True,
+                                      edge_bf16=True)
+        params_spec = jax.eval_shape(
+            lambda: mod.init_params(jax.random.PRNGKey(0), cfg))
+        opt_spec = jax.eval_shape(
+            lambda p: init_opt_state(p, opt_cfg), params_spec)
+        step = _gnn_train_step(cfg, m.MODULE, opt_cfg)
+        return CellBuild(arch, shape, "train", fam, cfg, step,
+                         (params_spec, opt_spec, g_spec), qopt, opt)
+
+    # recsys
+    from repro.models.recsys import sasrec as S
+    cfg = m.full_config()
+    kind = m.RECSYS_SHAPES[shape]["kind"]
+    params_spec = jax.eval_shape(
+        lambda: S.init_params(jax.random.PRNGKey(0), cfg))
+    batch_spec = m.input_specs(shape, cfg)
+    step = _sasrec_steps(cfg, kind, opt_cfg)
+    if kind == "train":
+        opt_spec = jax.eval_shape(
+            lambda p: init_opt_state(p, opt_cfg), params_spec)
+        specs = (params_spec, opt_spec, batch_spec)
+    else:
+        specs = (params_spec, batch_spec)
+    return CellBuild(arch, shape, kind, fam, cfg, step, specs, qopt, opt)
+
+

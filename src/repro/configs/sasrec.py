@@ -1,0 +1,41 @@
+"""sasrec [arXiv:1808.09781]: embed_dim=50, 2 blocks, 1 head, seq_len=50,
+self-attentive sequential interaction; item table 10^6 rows (the huge
+sparse embedding of the recsys regime)."""
+import jax
+import jax.numpy as jnp
+from repro.models.recsys.sasrec import SASRecConfig
+
+FAMILY = "recsys"
+SKIP_SHAPES = {}
+
+RECSYS_SHAPES = {
+    "train_batch":    {"kind": "train", "batch": 65_536},
+    "serve_p99":      {"kind": "serve", "batch": 512},
+    "serve_bulk":     {"kind": "serve", "batch": 262_144},
+    "retrieval_cand": {"kind": "retrieval", "batch": 1,
+                       "n_candidates": 1_000_000},
+}
+
+
+def full_config() -> SASRecConfig:
+    return SASRecConfig(name="sasrec", n_items=1_048_575,  # table = 2^20 rows (mesh-divisible), ~10^6 items embed_dim=50,
+                        n_blocks=2, n_heads=1, seq_len=50)
+
+
+def smoke_config() -> SASRecConfig:
+    return SASRecConfig(name="sasrec-smoke", n_items=500, embed_dim=16,
+                        n_blocks=2, n_heads=1, seq_len=10)
+
+
+def input_specs(shape_name: str, cfg: SASRecConfig):
+    info = RECSYS_SHAPES[shape_name]
+    B, S = info["batch"], cfg.seq_len
+    seq = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if info["kind"] == "train":
+        return {"seq": seq, "pos": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "neg": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if info["kind"] == "retrieval":
+        return {"seq": seq,
+                "candidates": jax.ShapeDtypeStruct((B, info["n_candidates"]),
+                                                   jnp.int32)}
+    return {"seq": seq}

@@ -1,0 +1,197 @@
+"""CBList — GastCoCo's prefetch-aware dynamic graph structure, TPU-adapted.
+
+Layout (paper Fig. 4 -> JAX arrays):
+
+  * vertex table: ``v_deg`` / ``v_level`` / ``v_head`` / ``v_tail`` —
+    the record's {size, level, traversal pointer, update/query pointer}.
+    ``level == number of blocks in the chain`` (paper: 0 = small chunk,
+    >0 = B+ leaf count; with a flat chain the two unify: level<=1 is the
+    "small chunk" regime).
+  * edge storage: a :class:`~repro.core.blockstore.BlockStore` whose blocks
+    are the chunk/B+-leaf analogue — width is a multiple of the TPU lane
+    count (128) the way the paper sizes chunks in cache lines.  Keys are the
+    destination ids (sorted within a block, PAD-filled), values the edge
+    weights (AOA storage: struct-of-arrays, the TPU-friendly choice).
+  * GTChain: blocks are *allocated* in logical-vertex order at build/compact
+    time, so the physical block array *is* the global traversal chain;
+    whole-graph ops iterate blocks, never vertices (perfect load balance —
+    the paper's fine-grained GTChain partition).
+
+Divergences from the C++ design (see DESIGN.md §7): B+ interior nodes are
+replaced by per-block [min,max] fences over a flat chain; incremental
+inserts append at the tail (fast, BAL-style) which may leave the *last*
+block's range overlapping earlier ones — queries fence-filter, and
+:func:`repro.core.blockstore.compact`/:func:`rebuild` restore perfect order.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blockstore as bs
+from repro.core.blockstore import BlockStore, NULL, PAD
+
+
+class CBList(NamedTuple):
+    store: BlockStore
+    v_deg: jax.Array     # i32[NV] live out-degree
+    v_level: jax.Array   # i32[NV] number of blocks in the chain
+    v_head: jax.Array    # i32[NV] traversal pointer (first block, NULL if none)
+    v_tail: jax.Array    # i32[NV] update pointer (last block, NULL if none)
+    n_vertices: jax.Array  # i32[] live logical vertices
+
+    @property
+    def capacity_vertices(self) -> int:
+        return self.v_deg.shape[0]
+
+    @property
+    def block_width(self) -> int:
+        return self.store.block_width
+
+    @property
+    def num_edges(self) -> jax.Array:
+        return self.v_deg.sum()
+
+    @property
+    def max_chain(self) -> int:
+        """Static upper bound on chain length (worst case: all edges on one vertex)."""
+        return self.store.num_blocks
+
+
+def empty(num_vertices: int, num_blocks: int, block_width: int = 128,
+          vertex_capacity: Optional[int] = None) -> CBList:
+    nv = vertex_capacity or num_vertices
+    return CBList(
+        store=bs.make_store(num_blocks, block_width),
+        v_deg=jnp.zeros((nv,), jnp.int32),
+        v_level=jnp.zeros((nv,), jnp.int32),
+        v_head=jnp.full((nv,), NULL, jnp.int32),
+        v_tail=jnp.full((nv,), NULL, jnp.int32),
+        n_vertices=jnp.asarray(num_vertices, jnp.int32),
+    )
+
+
+def _exclusive_cumsum(x):
+    return jnp.concatenate([jnp.zeros((1,), x.dtype), jnp.cumsum(x)[:-1]])
+
+
+@functools.partial(jax.jit, static_argnames=("num_vertices", "num_blocks",
+                                             "block_width", "vertex_capacity"))
+def build_from_coo(src: jax.Array, dst: jax.Array, w: Optional[jax.Array],
+                   *, num_vertices: int, num_blocks: int, block_width: int = 128,
+                   vertex_capacity: Optional[int] = None,
+                   valid: Optional[jax.Array] = None) -> CBList:
+    """Bulk-load a CBList from COO edges (LoadGraph).
+
+    Blocks are laid out in (src, dst)-sorted order: the resulting physical
+    array is exactly the GTChain, so the build is prefetch-perfect
+    (contiguity == 1.0).  ``num_blocks`` must be >= ceil-per-vertex demand.
+    Entries with ``valid == False`` (padding) are ignored.
+    """
+    E = src.shape[0]
+    B = block_width
+    nv = vertex_capacity or num_vertices
+    if w is None:
+        w = jnp.ones((E,), jnp.float32)
+    if valid is None:
+        valid = jnp.ones((E,), bool)
+
+    # composite (src, dst) sort via stable lexsort (int64-free; pads last)
+    s_key = jnp.where(valid, src, PAD)
+    d_key = jnp.where(valid, dst, PAD)
+    order = jnp.lexsort((d_key, s_key))
+    s, d, ww, ok = src[order], dst[order], w[order], valid[order]
+
+    seg = jnp.where(ok, s, nv)                              # out-of-range drops
+    deg = jax.ops.segment_sum(ok.astype(jnp.int32), seg, num_segments=nv)
+    nbv = -(-deg // B)                                      # ceil blocks per vertex
+    boff = _exclusive_cumsum(nbv)                           # first block id per vertex
+    vstart = _exclusive_cumsum(deg)                         # first edge rank per vertex
+
+    s_safe = jnp.where(ok, s, 0)
+    rank = jnp.arange(E, dtype=jnp.int32) - vstart[s_safe]  # rank within vertex
+    blk = jnp.where(ok, boff[s_safe] + rank // B, num_blocks)  # invalid -> dropped
+    lane = jnp.where(ok, rank % B, 0)
+
+    store = bs.make_store(num_blocks, B)
+    keys = store.keys.at[blk, lane].set(d, mode="drop")
+    vals = store.vals.at[blk, lane].set(ww, mode="drop")
+    count = jax.ops.segment_sum(jnp.ones_like(blk), blk,
+                                num_segments=num_blocks).astype(jnp.int32)
+    owner = jnp.full((num_blocks,), NULL, jnp.int32).at[blk].set(s, mode="drop")
+    seq = jnp.zeros((num_blocks,), jnp.int32).at[blk].set(rank // B, mode="drop")
+    # chains are physically consecutive at build time
+    ids = jnp.arange(num_blocks, dtype=jnp.int32)
+    has_next = (ids + 1 < num_blocks) & (owner != NULL)
+    nxt_owner = jnp.roll(owner, -1)
+    nxt_seq = jnp.roll(seq, -1)
+    nxt = jnp.where(has_next & (nxt_owner == owner) & (nxt_seq == seq + 1),
+                    ids + 1, NULL)
+
+    total_blocks = nbv.sum()
+    free_top = jnp.asarray(num_blocks, jnp.int32) - total_blocks
+    # free stack must hand out blocks total_blocks, total_blocks+1, ... in order
+    free_stack = jnp.arange(num_blocks - 1, -1, -1, dtype=jnp.int32)
+
+    store = BlockStore(keys=keys, vals=vals, count=count, owner=owner, nxt=nxt,
+                       seq=seq, free_stack=free_stack, free_top=free_top)
+    v_head = jnp.where(nbv > 0, boff, NULL).astype(jnp.int32)
+    v_tail = jnp.where(nbv > 0, boff + nbv - 1, NULL).astype(jnp.int32)
+    return CBList(store=store, v_deg=deg, v_level=nbv.astype(jnp.int32),
+                  v_head=v_head, v_tail=v_tail,
+                  n_vertices=jnp.asarray(num_vertices, jnp.int32))
+
+
+def to_coo(cbl: CBList, max_edges: int):
+    """Extract live edges as padded COO (src, dst, w, valid) — GTChain order.
+
+    ``max_edges`` is a static capacity; entries past the live count have
+    valid=False and src=dst=0.
+    """
+    st = cbl.store
+    gt = bs.gtchain_order(st)
+    keys = st.keys[gt]                        # [NB, B] in GTChain order
+    vals = st.vals[gt]
+    owner = st.owner[gt]
+    lane = jnp.arange(st.block_width, dtype=jnp.int32)
+    live = (lane[None, :] < st.count[gt][:, None]) & (owner[:, None] != NULL)
+    src = jnp.broadcast_to(owner[:, None], keys.shape)
+    flat_valid = live.ravel()
+    # stable-sort valid entries to the front, preserving GTChain order
+    perm = jnp.argsort(~flat_valid, stable=True)[:max_edges]
+    return (jnp.where(flat_valid[perm], src.ravel()[perm], 0),
+            jnp.where(flat_valid[perm], keys.ravel()[perm], 0),
+            jnp.where(flat_valid[perm], vals.ravel()[perm], 0.0),
+            flat_valid[perm])
+
+
+def rebuild(cbl: CBList, max_edges: int, num_blocks: Optional[int] = None,
+            block_width: Optional[int] = None) -> CBList:
+    """Full defragmenting rebuild (the maintenance analogue of B+ rebalancing).
+
+    Extracts live edges and bulk-loads them again: restores range-disjoint
+    sorted chains and GTChain physical contiguity.
+    """
+    s, d, w, valid = to_coo(cbl, max_edges)
+    nb = num_blocks or cbl.store.num_blocks
+    bw = block_width or cbl.block_width
+    nv = cbl.capacity_vertices
+    return build_from_coo(s, d, w, num_vertices=nv, num_blocks=nb,
+                          block_width=bw, vertex_capacity=nv,
+                          valid=valid)._replace(n_vertices=cbl.n_vertices)
+
+
+def degrees(cbl: CBList) -> jax.Array:
+    return cbl.v_deg
+
+
+def block_fences(store: BlockStore):
+    """Per-block [min,max] key fences (the B+ interior-node analogue)."""
+    lane = jnp.arange(store.block_width, dtype=jnp.int32)
+    mask = lane[None, :] < store.count[:, None]
+    lo = store.keys[:, 0]
+    hi = jnp.max(jnp.where(mask, store.keys, jnp.int32(-1)), axis=1)
+    return lo, hi

@@ -1,0 +1,142 @@
+"""Dynamic graph processing engine: the Table-1 API over CBList.
+
+ProcessEdge executes block-parallel over the GTChain (the fine-grained
+partition): every block contributes its lanes through a segment reduction.
+This is the paper's interleaved execution mode mapped onto TPU data
+parallelism — the per-coroutine chain walks become independent block rows of
+one vectorized op, and the software prefetch becomes the scalar-prefetched
+DMA schedule of the Pallas ``segment_matmul`` kernel (XLA segment ops are
+the portable oracle path; the tuner picks, see :mod:`repro.core.tuner`).
+
+Semantics of one ProcessEdge sweep (push mode):
+
+    msg(e=(u,v)) = dense_f(x[u], w_uv)        for u active
+    y[v]         = combine_e(msg over in-edges)
+
+Pull mode gathers x[v_dst] per lane instead (random access — the case where
+the paper's software prefetching shines; on TPU the gather is one XLA
+``take`` over the contiguous value vector).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blockstore import NULL, PAD
+from repro.core.cblist import CBList
+from repro.core.traversal import lane_mask
+
+COMBINERS = {
+    "sum": jax.ops.segment_sum,
+    "min": jax.ops.segment_min,
+    "max": jax.ops.segment_max,
+}
+
+
+def process_vertex(cbl: CBList, f: Callable, x: jax.Array,
+                   active: Optional[jax.Array] = None) -> jax.Array:
+    """ProcessVertex(f, active): map f over vertex values (inactive keep x)."""
+    y = f(x)
+    live = jnp.arange(cbl.capacity_vertices) < cbl.n_vertices
+    if active is not None:
+        live = live & active
+    return jnp.where(live, y, x)
+
+
+@functools.partial(jax.jit, static_argnames=("dense_f", "combine", "impl"))
+def process_edge_push(cbl: CBList, x: jax.Array,
+                      active: Optional[jax.Array] = None,
+                      *, dense_f: Callable = lambda xs, w: xs * w,
+                      combine: str = "sum",
+                      impl: str = "xla") -> jax.Array:
+    """Push sweep: y[dst] = combine over in-edges of dense_f(x[src], w).
+
+    Block-parallel over the GTChain: each block has exactly one owner, so the
+    per-block source value is a scalar broadcast — no gather on the hot path
+    (this is the locality the GTChain buys).
+    """
+    st = cbl.store
+    nv = cbl.capacity_vertices
+    owner_safe = jnp.maximum(st.owner, 0)
+    xs = x[owner_safe]                                   # [NB] per-block src value
+    mask = lane_mask(st)
+    if active is not None:
+        mask = mask & active[owner_safe][:, None]
+    msg = dense_f(xs[:, None], st.vals)                  # [NB, B]
+    seg = jnp.where(mask, st.keys, nv)                   # PAD/out-of-range drop
+    if combine == "sum":
+        msg = jnp.where(mask, msg, 0.0)
+        return jax.ops.segment_sum(msg.ravel(), seg.ravel(), num_segments=nv)
+    fill = jnp.inf if combine == "min" else -jnp.inf
+    msg = jnp.where(mask, msg, fill)
+    out = COMBINERS[combine](msg.ravel(), seg.ravel(), num_segments=nv)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("dense_f", "combine"))
+def process_edge_pull(cbl: CBList, x: jax.Array,
+                      active_dst: Optional[jax.Array] = None,
+                      *, dense_f: Callable = lambda xd, w: xd * w,
+                      combine: str = "sum") -> jax.Array:
+    """Pull sweep: y[src] = combine over out-edges of dense_f(x[dst], w).
+
+    The x[dst] gather is the random-access pattern of the paper (§2.1); on
+    the blocked layout it is a single vectorized take over lanes.
+    """
+    st = cbl.store
+    nv = cbl.capacity_vertices
+    mask = lane_mask(st)
+    dst_safe = jnp.clip(st.keys, 0, nv - 1)
+    xd = x[dst_safe]                                     # [NB, B] random gather
+    if active_dst is not None:
+        mask = mask & active_dst[dst_safe]
+    msg = dense_f(xd, st.vals)
+    owner_seg = jnp.where(st.owner == NULL, nv, st.owner)
+    if combine == "sum":
+        msg = jnp.where(mask, msg, 0.0)
+        per_blk = msg.sum(axis=1)
+        return jax.ops.segment_sum(per_blk, owner_seg, num_segments=nv)
+    fill = jnp.inf if combine == "min" else -jnp.inf
+    msg = jnp.where(mask, msg, fill)
+    per_blk = msg.min(axis=1) if combine == "min" else msg.max(axis=1)
+    return COMBINERS[combine](per_blk, owner_seg, num_segments=nv)
+
+
+@functools.partial(jax.jit, static_argnames=("weighted",))
+def process_edge_push_feat(cbl: CBList, x: jax.Array,
+                           active: Optional[jax.Array] = None,
+                           *, weighted: bool = True) -> jax.Array:
+    """Feature-matrix push: y[dst, :] += x[src, :] * w over all edges.
+
+    x: f32[NV, F].  Block-parallel: per-block source row broadcast over
+    lanes (one gather of F values per block — GTChain locality), then a
+    segment-sum scatter keyed by the lane destinations.
+    """
+    st = cbl.store
+    nv = cbl.capacity_vertices
+    owner_safe = jnp.maximum(st.owner, 0)
+    xs = x[owner_safe]                                   # [NB, F]
+    mask = lane_mask(st)
+    if active is not None:
+        mask = mask & active[owner_safe][:, None]
+    scale = st.vals if weighted else jnp.ones_like(st.vals)
+    msg = xs[:, None, :] * jnp.where(mask, scale, 0.0)[:, :, None]  # [NB,B,F]
+    seg = jnp.where(mask, st.keys, nv)
+    return jax.ops.segment_sum(msg.reshape(-1, x.shape[1]),
+                               seg.ravel(), num_segments=nv)
+
+
+def out_degrees(cbl: CBList) -> jax.Array:
+    return cbl.v_deg
+
+
+def in_degrees(cbl: CBList) -> jax.Array:
+    st = cbl.store
+    nv = cbl.capacity_vertices
+    mask = lane_mask(st)
+    seg = jnp.where(mask, st.keys, nv)
+    return jax.ops.segment_sum(jnp.ones(seg.shape, jnp.int32).ravel(),
+                               seg.ravel(), num_segments=nv)

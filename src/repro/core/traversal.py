@@ -1,0 +1,116 @@
+"""Traversal operations and stream partitioning (paper §2.1, §5.2).
+
+Data-access operations: scan_vertices / scan_vertices(cond) / read_vertex /
+scan_edges(v_src) / read_edge(v_src, v_dst), plus the two coroutine
+load-balancing partition strategies:
+
+  * **vertex-table partition** — contiguous vertex ranges per stream; cheap
+    but skew-sensitive (a super-vertex unbalances a stream);
+  * **GTChain partition** — contiguous *block* ranges per stream in global
+    traversal chain order; perfectly balanced because every block holds at
+    most ``block_width`` edges regardless of degree skew.
+
+"Streams" are the TPU analogue of the paper's coroutines: on device they
+become grid rows of the Pallas kernels / shards of a shard_map; on CPU they
+are slices.  The balance statistics here feed the adaptation layer.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blockstore as bs
+from repro.core.blockstore import NULL, PAD
+from repro.core.cblist import CBList
+
+
+def lane_mask(store: bs.BlockStore) -> jax.Array:
+    """bool[NB, B]: live edge lanes (block owned and lane < count)."""
+    lane = jnp.arange(store.block_width, dtype=jnp.int32)
+    return (lane[None, :] < store.count[:, None]) & (store.owner != NULL)[:, None]
+
+
+def scan_vertices(cbl: CBList) -> jax.Array:
+    """All live logical vertex ids mask (scan_vertices())."""
+    return jnp.arange(cbl.capacity_vertices) < cbl.n_vertices
+
+
+def scan_vertices_cond(cbl: CBList, cond: jax.Array) -> jax.Array:
+    """scan_vertices(cond): conditional filtering during the traversal."""
+    return scan_vertices(cbl) & cond
+
+
+def read_vertex(cbl: CBList, v: jax.Array):
+    """read_vertex(v): the vertex record."""
+    return dict(deg=cbl.v_deg[v], level=cbl.v_level[v],
+                head=cbl.v_head[v], tail=cbl.v_tail[v])
+
+
+def scan_edges(cbl: CBList, v: jax.Array, max_degree: int
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """scan_edges(v_src): neighbors of one vertex, padded to ``max_degree``.
+
+    Chain-walk via GetNeighbors(vertex) (Alg. 2): ``level`` block fetches.
+    Returns (dst[max_degree], w[max_degree], valid[max_degree]).
+    """
+    st = cbl.store
+    B = st.block_width
+    n_blocks = -(-max_degree // B)
+
+    def body(carry, _):
+        cur = carry
+        safe = jnp.maximum(cur, 0)
+        ks = jnp.where(cur != NULL, st.keys[safe], PAD)
+        vs = jnp.where(cur != NULL, st.vals[safe], 0.0)
+        cnt = jnp.where(cur != NULL, st.count[safe], 0)
+        nxt = jnp.where(cur != NULL, st.nxt[safe], NULL)
+        return nxt, (ks, vs, cnt)
+
+    _, (ks, vs, cnt) = jax.lax.scan(body, cbl.v_head[v], None, length=n_blocks)
+    lane = jnp.arange(B, dtype=jnp.int32)
+    valid = lane[None, :] < cnt[:, None]
+    return (ks.reshape(-1)[:max_degree], vs.reshape(-1)[:max_degree],
+            valid.reshape(-1)[:max_degree])
+
+
+# ---------------------------------------------------------------------------
+# Partition strategies (§5.2)
+# ---------------------------------------------------------------------------
+
+class Partition(NamedTuple):
+    """N streams over either vertices or GTChain blocks."""
+    kind: str              # "vertex" | "gtchain"  (static)
+    starts: jax.Array      # i32[N]
+    stops: jax.Array       # i32[N]
+
+
+def vertex_table_partition(cbl: CBList, n_streams: int) -> Partition:
+    nv = cbl.capacity_vertices
+    bounds = jnp.linspace(0, nv, n_streams + 1).astype(jnp.int32)
+    return Partition("vertex", bounds[:-1], bounds[1:])
+
+
+def gtchain_partition(cbl: CBList, n_streams: int) -> Partition:
+    """Fine-grained partition: equal **block** counts per stream (X/N blocks)."""
+    live = (cbl.store.owner != NULL).sum()
+    bounds = jnp.linspace(0, 1, n_streams + 1)
+    bounds = (bounds * live).astype(jnp.int32)
+    return Partition("gtchain", bounds[:-1], bounds[1:])
+
+
+def partition_balance(cbl: CBList, part: Partition) -> jax.Array:
+    """Max/mean edges per stream (1.0 = perfect).  The paper's motivation for
+    GTChain partitioning is driving this toward 1 under degree skew."""
+    if part.kind == "vertex":
+        csum = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                jnp.cumsum(cbl.v_deg)])
+        per = csum[part.stops] - csum[part.starts]
+    else:
+        order = bs.gtchain_order(cbl.store)
+        cnt = cbl.store.count[order]
+        csum = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(cnt)])
+        per = csum[part.stops] - csum[part.starts]
+    mean = jnp.maximum(per.sum() / per.shape[0], 1)
+    return per.max() / mean

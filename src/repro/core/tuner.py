@@ -1,0 +1,98 @@
+"""Adaptation layer (paper §6): system configuration probe + execution
+strategy tuner.
+
+The paper probes the machine for the optimal number of coroutines per thread
+and picks one of four prefetch strategies (All-Hard / All-Soft / Hybrid-I by
+block size / Hybrid-II by hotness).  TPU mapping:
+
+  * coroutines/thread      -> DMA pipeline lookahead (in-flight VMEM buffers)
+  * All-Hard               -> contiguous XLA ops only (Pallas automatic
+                              sequential pipelining covers the fetches)
+  * All-Soft               -> scalar-prefetched Pallas kernels everywhere
+  * Hybrid-I (block size)  -> small-chunk vertices (level<=1, contiguous in
+                              the block array) via the contiguous path;
+                              multi-block chains via scalar prefetch
+  * Hybrid-II (hotness)    -> software prefetch only for the *head* of each
+                              chain (the cold-start miss of the jump-pointer
+                              mechanism); steady-state blocks ride the
+                              automatic pipeline
+
+The decision rule is the paper's ``C_m × (1 - P_h) < C_coro`` with TPU cost
+constants: P_h is the GTChain contiguity statistic (probability the next
+chain block is the next physical block — covered by automatic pipelining),
+C_m the exposed HBM block fetch latency, C_coro the scalar-prefetch setup
+overhead per block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import blockstore as bs
+from repro.core.cblist import CBList
+
+STRATEGIES = ("all_hard", "all_soft", "hybrid_block", "hybrid_hot")
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemProbe:
+    """System configuration probe results (prefabricated constants for the
+    dry-run container; a real TPU deployment would microbenchmark these)."""
+    hbm_bw_gbps: float = 819.0          # v5e HBM bandwidth
+    block_fetch_overhead_us: float = 0.5   # exposed latency of a cold block DMA
+    scalar_prefetch_overhead_us: float = 0.05  # per-block SMEM/index setup
+    vmem_bytes: int = 64 * 2 ** 20      # ~64 MiB usable VMEM on v5e half?  -> lookahead cap
+    max_lookahead: int = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecPlan:
+    strategy: str            # one of STRATEGIES
+    partition: str           # "vertex" | "gtchain"
+    lookahead: int           # pipeline depth (coroutine-count analogue)
+    impl: str                # "xla" | "pallas"
+
+
+def choose_lookahead(probe: SystemProbe, block_bytes: int) -> int:
+    """Coroutine-count analogue: enough in-flight buffers to cover the fetch
+    latency, capped by VMEM (paper: enough coroutines to hide C_m)."""
+    fetch_us = block_bytes / (probe.hbm_bw_gbps * 1e3)   # bytes / (GB/s) in us
+    need = int(jnp.ceil(probe.block_fetch_overhead_us / max(fetch_us, 1e-6)))
+    cap_vmem = max(2, probe.vmem_bytes // max(block_bytes, 1) // 4)
+    return int(max(2, min(need, probe.max_lookahead, cap_vmem)))
+
+
+def choose_plan(cbl: CBList, task: str, probe: Optional[SystemProbe] = None,
+                on_tpu: bool = False) -> ExecPlan:
+    """Execution strategy tuner (paper Fig. 8).
+
+    ``task``: "scan_all" (PageRank/CC/LP dense sweeps), "frontier"
+    (BFS/SSSP sparse steps), "query" (read_edge), "batch_update".
+    """
+    probe = probe or SystemProbe()
+    contiguity = float(bs.gtchain_contiguity(cbl.store))       # P_h analogue
+    frac_chunks = float((cbl.v_level <= 1).mean())             # small-chunk share
+    block_bytes = cbl.store.block_width * 8                    # key+val lanes
+    lookahead = choose_lookahead(probe, block_bytes)
+    impl = "pallas" if on_tpu else "xla"
+
+    # partition: whole-graph sweeps use the fine-grained GTChain partition;
+    # frontier/query tasks need per-vertex chains (GTChain only valid for
+    # scan_vertices+scan_edges over everything, paper §5.2)
+    partition = "gtchain" if task == "scan_all" else "vertex"
+
+    # hybrid decision: C_m × (1 - P_h) vs C_coro  (paper §6.2)
+    exposed = probe.block_fetch_overhead_us * (1.0 - contiguity)
+    if exposed < probe.scalar_prefetch_overhead_us:
+        strategy = "all_hard"            # hardware-analogue pipeline suffices
+    elif task == "batch_update" or task == "query":
+        # pointer-chasing chains dominate; prefetch the cold heads
+        strategy = "hybrid_hot"
+    elif frac_chunks > 0.9:
+        strategy = "hybrid_block"        # chunks contiguous; chains prefetched
+    else:
+        strategy = "all_soft"
+    return ExecPlan(strategy=strategy, partition=partition,
+                    lookahead=lookahead, impl=impl)

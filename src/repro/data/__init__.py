@@ -1,0 +1,2 @@
+from repro.data.synthetic import (rmat_edges, sasrec_batches, token_stream,
+                                  update_stream)

@@ -1,0 +1,97 @@
+"""Synthetic data generators: RMAT graphs, dynamic update streams, LM token
+streams, SASRec interaction sequences.
+
+RMAT (Chakrabarti et al.) gives the power-law degree skew that motivates
+both CBList's chunk/B+ split and the GTChain coroutine load balancing —
+benchmark graphs must be skewed or the paper's effects vanish.  Streams are
+numpy-side (host input pipeline); device code receives fixed-shape batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import numpy as np
+
+
+def rmat_edges(n_vertices: int, n_edges: int, *, a=0.57, b=0.19, c=0.19,
+               seed: int = 0, dedupe: bool = True) -> Tuple[np.ndarray, np.ndarray]:
+    """R-MAT power-law directed graph; returns (src, dst) int32 arrays."""
+    rng = np.random.default_rng(seed)
+    scale = max(1, int(np.ceil(np.log2(max(n_vertices, 2)))))
+    n_gen = int(n_edges * 1.3) if dedupe else n_edges
+    src = np.zeros(n_gen, np.int64)
+    dst = np.zeros(n_gen, np.int64)
+    for level in range(scale):
+        r = rng.random(n_gen)
+        # quadrant probabilities a, b, c, d
+        right = r >= a + b            # dst high bit
+        down = ((r >= a) & (r < a + b)) | (r >= a + b + c)
+        src = src * 2 + down.astype(np.int64)
+        dst = dst * 2 + right.astype(np.int64)
+    src %= n_vertices
+    dst %= n_vertices
+    if dedupe:
+        key = src * n_vertices + dst
+        _, idx = np.unique(key, return_index=True)
+        idx = idx[:n_edges]
+        src, dst = src[idx], dst[idx]
+    return src[:n_edges].astype(np.int32), dst[:n_edges].astype(np.int32)
+
+
+def update_stream(n_vertices: int, existing: Tuple[np.ndarray, np.ndarray],
+                  batch_size: int, n_batches: int, *, delete_frac: float = 0.2,
+                  seed: int = 1) -> Iterator[Tuple[np.ndarray, np.ndarray,
+                                                   np.ndarray, np.ndarray]]:
+    """Yields (src, dst, w, op) update batches (op: +1 insert / -1 delete).
+
+    Deletions sample from the live edge set; insertions draw fresh RMAT-ish
+    endpoints — the Figure 12/13 workload.
+    """
+    rng = np.random.default_rng(seed)
+    live = set(zip(existing[0].tolist(), existing[1].tolist()))
+    for b in range(n_batches):
+        n_del = int(batch_size * delete_frac)
+        n_ins = batch_size - n_del
+        live_list = list(live)
+        del_idx = rng.choice(len(live_list), size=min(n_del, len(live_list)),
+                             replace=False)
+        dels = [live_list[i] for i in del_idx]
+        ins = []
+        while len(ins) < n_ins:
+            s = int(rng.integers(0, n_vertices))
+            d = int(rng.integers(0, n_vertices))
+            if (s, d) not in live:
+                ins.append((s, d))
+                live.add((s, d))
+        for e in dels:
+            live.discard(e)
+        src = np.array([e[0] for e in ins] + [e[0] for e in dels], np.int32)
+        dst = np.array([e[1] for e in ins] + [e[1] for e in dels], np.int32)
+        w = rng.random(batch_size).astype(np.float32)
+        op = np.array([1] * len(ins) + [-1] * len(dels), np.int32)
+        yield src, dst, w, op
+
+
+def token_stream(vocab: int, batch: int, seq: int, *, seed: int = 0
+                 ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """Zipf-ish token batches (tokens, labels) for LM training."""
+    rng = np.random.default_rng(seed)
+    while True:
+        z = rng.zipf(1.3, size=(batch, seq + 1))
+        toks = np.minimum(z - 1, vocab - 1).astype(np.int32)
+        yield toks[:, :-1], toks[:, 1:]
+
+
+def sasrec_batches(n_items: int, batch: int, seq: int, *, seed: int = 0
+                   ) -> Iterator[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    """(seq, pos, neg) batches; item 0 is padding."""
+    rng = np.random.default_rng(seed)
+    while True:
+        s = rng.integers(1, n_items + 1, size=(batch, seq + 1)).astype(np.int32)
+        lengths = rng.integers(seq // 2, seq + 1, size=batch)
+        mask = np.arange(seq)[None, :] < lengths[:, None]
+        seq_in = np.where(mask, s[:, :-1], 0).astype(np.int32)
+        pos = np.where(mask, s[:, 1:], 0).astype(np.int32)
+        neg = rng.integers(1, n_items + 1, size=(batch, seq)).astype(np.int32)
+        yield seq_in, pos, neg

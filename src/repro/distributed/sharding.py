@@ -1,0 +1,251 @@
+"""Sharding rules per model family (GSPMD partition specs by param path).
+
+LM transformers: Megatron-style tensor parallel on "model" (column-parallel
+qkv/up projections, row-parallel o/down), FSDP on "data" for the other
+weight dim (ZeRO-3 — GSPMD all-gathers per layer inside the scan),
+expert-parallel MoE (experts over "model"), vocab-parallel lm_head.
+Stacked period params carry a leading layer dim -> specs get a leading None.
+
+GNNs: vertex-partitioned batch (Gemini-style, the partitioning the paper
+cites for locality) with replicated (small) params.
+
+SASRec: row-sharded item table over "model" (the 10^6-row embedding is the
+only big tensor), batch over the data axes.
+
+Optimizer state mirrors its parameter's spec; 8-bit quantized moments are
+sharded on their flat block dim over "data".
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+
+def _key_path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+def _fit(spec: P, shape) -> P:
+    """Drop sharding on dims the spec ranks beyond the array rank."""
+    if len(spec) > len(shape):
+        spec = P(*spec[:len(shape)])
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# LM params
+# ---------------------------------------------------------------------------
+
+_LM_RULES = [
+    (r"embed$", P(None, "model")),
+    (r"lm_head$", P("data", "model")),
+    (r"router$", P(None, None)),
+    # MoE expert stacks [E, d, f] / [E, f, d]: experts -> model (EP),
+    # second dim -> data (FSDP)
+    (r"moe/(wi|wg|wo)$", P("model", "data", None)),
+    # dense / shared-expert MLP
+    (r"(mlp|shared)/(wi|wg)$", P("data", "model")),
+    (r"(mlp|shared)/wo$", P("model", "data")),
+    # attention
+    (r"attn/(wq|wk|wv)$", P("data", "model")),
+    (r"attn/wo$", P("model", "data")),
+    (r"attn/b[qkv]$", P("model")),
+]
+
+
+def lm_param_spec(path_str: str, ndim: int, fsdp_axes=("data",)) -> P:
+    stacked = path_str.startswith("periods/")
+    for pat, spec in _LM_RULES:
+        if re.search(pat, path_str):
+            # FSDP dim extends over the pod axis on multi-pod meshes
+            spec = P(*(fsdp_axes if a == "data" else a for a in spec))
+            if stacked:
+                spec = P(*((None,) + tuple(spec)))
+            return _fit(spec, (0,) * ndim)
+    return P()                                               # replicate
+
+
+def _opt_wrap(rule_fn):
+    """Optimizer state paths look like m/<param path> or v/<param path>."""
+    def fn(path_str: str, leaf) -> P:
+        m = re.match(r"^(m|v)/(.*)$", path_str)
+        inner = m.group(2) if m else path_str
+        if path_str == "step" or inner == "step":
+            return P()
+        # quantized moments: QTensor(qcodes[Nblk, 256], qscale[Nblk]) —
+        # flat blocks shard over the WHOLE mesh (block count is padded to a
+        # multiple of 512 in optim/adamw.py); data-axis-only sharding left
+        # 129 GiB/device at kimi scale (§Perf finding)
+        if inner.endswith("/qcodes"):
+            return P(("data", "model"), None)
+        if inner.endswith("/qscale"):
+            return P(("data", "model"))
+        return rule_fn(inner, getattr(leaf, "ndim", len(leaf.shape)))
+    return fn
+
+
+def _tree_shardings(mesh: Mesh, tree, spec_fn):
+    def assign(path, leaf):
+        if leaf is None:
+            return None
+        ps = spec_fn(_key_path_str(path), leaf)
+        return NamedSharding(mesh, ps)
+    return jax.tree_util.tree_map_with_path(assign, tree)
+
+
+def lm_shardings(mesh: Mesh, cb) -> Any:
+    """in_shardings pytree for an LM cell (train/prefill/decode)."""
+    ba = batch_axes(mesh)
+    fsdp = ba                                 # ("data",) or ("pod", "data")
+    params_sh = _tree_shardings(
+        mesh, cb.arg_specs[0],
+        lambda p, l: lm_param_spec(p, len(l.shape), fsdp))
+
+    if cb.kind == "train":
+        opt_sh = _tree_shardings(
+            mesh, cb.arg_specs[1],
+            _opt_wrap(lambda p, nd: lm_param_spec(p, nd, fsdp)))
+        batch_sh = {k: NamedSharding(mesh, P(ba, None))
+                    for k in cb.arg_specs[2]}
+        return (params_sh, opt_sh, batch_sh)
+
+    if cb.kind == "prefill":
+        batch_sh = {"tokens": NamedSharding(mesh, P(ba, None))}
+        return (params_sh, batch_sh)
+
+    # decode: cache [L, B, KVH, S, D]
+    B = cb.arg_specs[1]["tokens"].shape[0]
+    if B == 1:
+        # long-context: sequence-sharded KV (LSE merge via GSPMD collectives)
+        kv_spec = P(None, None, None, ("data", "model"), None)
+        tok_spec = P(None, None)
+        len_spec = P(None)
+    else:
+        kv_spec = P(None, ba, None, "model", None)
+        tok_spec = P(ba, None)
+        len_spec = P(ba)
+    cache_sh = {"k": NamedSharding(mesh, kv_spec),
+                "v": NamedSharding(mesh, kv_spec),
+                "lengths": NamedSharding(mesh, len_spec)}
+    return (params_sh, {"cache": cache_sh,
+                        "tokens": NamedSharding(mesh, tok_spec)})
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+def gnn_shardings(mesh: Mesh, cb) -> Any:
+    ba = batch_axes(mesh)
+    rep = NamedSharding(mesh, P())
+    params_sh = jax.tree.map(lambda _: rep, cb.arg_specs[0])
+    opt_sh = jax.tree.map(lambda _: rep, cb.arg_specs[1])
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    feature_sharded = (bool(getattr(cb, "opt", ""))
+                       and cb.arg_specs[2]["x"].shape[1] % model_size == 0)
+
+    def g_spec(path_str, leaf):
+        nd = len(leaf.shape)
+        if path_str in ("x", "pos"):
+            if feature_sharded and path_str == "x":
+                # beyond-paper variant (§Perf): features over "model" makes
+                # the x[src] gather local (node dim replicated) — the
+                # all-gather-per-layer of the vertex-partitioned pull model
+                # becomes one small all-reduce after the first linear
+                return P(None, "model")
+            return P(ba, None)
+        if nd == 1:
+            return P(ba)
+        return P(ba, None)
+
+    batch_sh = {k: (None if v is None
+                    else NamedSharding(mesh, g_spec(k, v)))
+                for k, v in cb.arg_specs[2].items()}
+    return (params_sh, opt_sh, batch_sh)
+
+
+# ---------------------------------------------------------------------------
+# recsys
+# ---------------------------------------------------------------------------
+
+def _sasrec_param_spec(path_str: str, ndim: int) -> P:
+    if path_str.endswith("item_emb"):
+        return P("model", None)
+    return P()
+
+
+def sasrec_shardings(mesh: Mesh, cb) -> Any:
+    ba = batch_axes(mesh)
+    params_sh = _tree_shardings(
+        mesh, cb.arg_specs[0],
+        lambda p, l: _sasrec_param_spec(p, len(l.shape)))
+    if cb.kind == "train":
+        opt_sh = _tree_shardings(
+            mesh, cb.arg_specs[1],
+            _opt_wrap(lambda p, nd: _sasrec_param_spec(p, nd)))
+        batch_sh = {k: NamedSharding(mesh, P(ba, None))
+                    for k in cb.arg_specs[2]}
+        return (params_sh, opt_sh, batch_sh)
+    batch = cb.arg_specs[1]
+    sh = {}
+    for k, v in batch.items():
+        if k == "candidates":
+            sh[k] = NamedSharding(mesh, P(None, ba))
+        elif v.shape[0] == 1:
+            sh[k] = NamedSharding(mesh, P(None, None))
+        else:
+            sh[k] = NamedSharding(mesh, P(ba, None))
+    return (params_sh, sh)
+
+
+def shardings_for_cell(mesh: Mesh, cb) -> Any:
+    if cb.family == "lm":
+        return lm_shardings(mesh, cb)
+    if cb.family == "gnn":
+        return gnn_shardings(mesh, cb)
+    return sasrec_shardings(mesh, cb)
+
+
+def out_shardings_for_cell(mesh: Mesh, cb, in_sh) -> Any:
+    """Pin outputs: state stays sharded exactly like the inputs (params /
+    opt / cache round-trip), scalars replicate, logits go vocab-parallel."""
+    rep = NamedSharding(mesh, P())
+    ba = batch_axes(mesh)
+    if cb.kind == "train":
+        params_sh, opt_sh = in_sh[0], in_sh[1]
+        return (rep, rep, params_sh, opt_sh)           # loss, gnorm, params, opt
+    if cb.kind == "prefill":
+        params_sh = in_sh[0]
+        B = cb.arg_specs[1]["tokens"].shape[0]
+        seq = cb.arg_specs[1]["tokens"].shape[1]
+        kv_spec = P(None, ba, None, "model", None)
+        logits_sh = NamedSharding(mesh, P(ba, "model"))
+        cache_sh = {"k": NamedSharding(mesh, kv_spec),
+                    "v": NamedSharding(mesh, kv_spec),
+                    "lengths": NamedSharding(mesh, P(ba))}
+        return (logits_sh, cache_sh)
+    if cb.kind == "decode":
+        cache_sh = in_sh[1]["cache"]
+        B = cb.arg_specs[1]["tokens"].shape[0]
+        logits_sh = NamedSharding(mesh, P(ba if B > 1 else None, "model"))
+        return (logits_sh, cache_sh)
+    if cb.kind in ("serve", "retrieval"):
+        B = list(cb.arg_specs[1].values())[0].shape[0]
+        if cb.kind == "retrieval":
+            return NamedSharding(mesh, P(None, ba))
+        return NamedSharding(mesh, P(ba if B > 1 else None, "model"))
+    return None

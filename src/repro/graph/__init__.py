@@ -1,0 +1,5 @@
+"""Graph analytics + sampling on the CBList engine."""
+from repro.graph.algorithms import (bfs, connected_components,
+                                    incremental_pagerank, label_propagation,
+                                    pagerank, sssp, triangle_count)
+from repro.graph.sampler import SampledGraph, sample_subgraph

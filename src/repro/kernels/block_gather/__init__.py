@@ -1,0 +1,2 @@
+from repro.kernels.block_gather.ops import gather_rows
+from repro.kernels.block_gather.ref import block_gather_ref

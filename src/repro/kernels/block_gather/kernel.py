@@ -1,0 +1,51 @@
+"""Scalar-prefetched block gather (paged row fetch).
+
+The purest port of the paper's software prefetch: the row indices (block
+table entries / CBList chain block ids / embedding row ids) are
+data-dependent — a hardware-style sequential pipeline cannot predict them.
+Feeding them through ``PrefetchScalarGridSpec`` lets the Pallas pipeline
+issue the DMA for row ``ids[i+k]`` while the kernel copies row ``ids[i]``
+(k = pipeline lookahead): interleaved execution without coroutines.
+
+Used for: CBList chain walks (batch queries / sampling), paged-KV-cache
+page fetch, and embedding-table row gather.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, table_ref, o_ref):
+    o_ref[...] = table_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_step", "interpret"))
+def block_gather(table: jax.Array, ids: jax.Array, *, rows_per_step: int = 8,
+                 interpret: bool = False) -> jax.Array:
+    """out[i] = table[ids[i]]  (ids in units of ``rows_per_step`` row groups).
+
+    ``table``: f32[R, F] with R % rows_per_step == 0; ``ids``: i32[N] group
+    indices in [0, R / rows_per_step).  Returns f32[N*rows_per_step, F].
+    """
+    N = ids.shape[0]
+    F = table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(N,),
+        in_specs=[pl.BlockSpec((rows_per_step, F), lambda i, ids: (ids[i], 0))],
+        out_specs=pl.BlockSpec((rows_per_step, F), lambda i, ids: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N * rows_per_step, F), table.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="block_gather",
+    )(ids, table)

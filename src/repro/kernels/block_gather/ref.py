@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for block_gather."""
+import jax
+import jax.numpy as jnp
+
+
+def block_gather_ref(table: jax.Array, ids: jax.Array,
+                     rows_per_step: int = 8) -> jax.Array:
+    R, F = table.shape
+    grouped = table.reshape(R // rows_per_step, rows_per_step, F)
+    return grouped[ids].reshape(-1, F)

@@ -1,0 +1,66 @@
+"""EmbeddingBag Pallas kernel: scalar-prefetched gather + fused segment reduce.
+
+RecSys hot path (DESIGN.md §5): ``out[b] = sum_{i in bag b} w[i] * table[ids[i]]``.
+JAX has no native EmbeddingBag; the XLA oracle is take + segment_sum.  The
+kernel fuses both: the *row ids* and the *bag ids* are both scalar-prefetch
+streams, so the pipeline DMAs future table rows (pointer-chasing — software
+prefetch) while accumulating the current bag in VMEM (bags are row-major
+flattened, hence sorted: consecutive grid steps revisit the same output row
+without HBM round-trips).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, seg_ref, wgt_ref, table_ref, o_ref):
+    i = pl.program_id(0)
+    first = (i == 0) | (seg_ref[i] != seg_ref[jnp.maximum(i - 1, 0)])
+    live = ids_ref[i] >= 0
+    row = table_ref[...] * wgt_ref[...] * jnp.where(live, 1.0, 0.0)
+
+    @pl.when(first)
+    def _init():
+        o_ref[...] = row
+
+    @pl.when(jnp.logical_not(first))
+    def _acc():
+        o_ref[...] += row
+
+
+@functools.partial(jax.jit, static_argnames=("num_bags", "interpret"))
+def embedding_bag_sorted(table: jax.Array, ids: jax.Array, seg: jax.Array,
+                         weights: jax.Array, *, num_bags: int,
+                         interpret: bool = False) -> jax.Array:
+    """``seg`` must be sorted ascending and cover every bag at least once
+    (callers pad each bag to >=1 slot; padded slots have ids == -1).
+
+    table: f32[V, F]; ids/seg/weights: [N].  Returns f32[num_bags, F].
+    """
+    N = ids.shape[0]
+    F = table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, ids, seg: (i, 0)),       # weight
+            # padded slots (ids == -1) clamp to row 0; masked in the kernel
+            pl.BlockSpec((1, F),
+                         lambda i, ids, seg: (jnp.maximum(ids[i], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, F), lambda i, ids, seg: (seg[i], 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_bags, F), table.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="embedding_bag",
+    )(ids, seg, weights.reshape(-1, 1), table)

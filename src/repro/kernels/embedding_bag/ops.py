@@ -1,0 +1,31 @@
+"""Public EmbeddingBag wrapper: [B, L] multi-hot bags -> kernel stream."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_sorted
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def embedding_bag(table: jax.Array, bag_ids: jax.Array,
+                  weights: jax.Array | None = None, *,
+                  impl: str = "xla") -> jax.Array:
+    """out[b] = sum_l w[b,l] * table[bag_ids[b,l]]   (ids -1 = padding).
+
+    impl: "xla" (oracle), "pallas", "pallas_interpret".
+    Bags flattened row-major are already sorted by bag — the GTChain
+    contract for free.
+    """
+    if impl == "xla":
+        return embedding_bag_ref(table, bag_ids, weights)
+    B, L = bag_ids.shape
+    if weights is None:
+        weights = jnp.ones((B, L), table.dtype)
+    seg = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None], (B, L))
+    return embedding_bag_sorted(table, bag_ids.reshape(-1), seg.reshape(-1),
+                                weights.reshape(-1), num_bags=B,
+                                interpret=(impl == "pallas_interpret"))

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for EmbeddingBag (take + segment_sum — the 'manual
+gather+segment_sum' JAX idiom the taxonomy prescribes)."""
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table: jax.Array, bag_ids: jax.Array,
+                      weights: jax.Array | None = None) -> jax.Array:
+    """bag_ids: i32[B, L] row ids per bag, -1 = padding.
+    weights: f32[B, L] or None (sum mode).  Returns f32[B, F]."""
+    B, L = bag_ids.shape
+    if weights is None:
+        weights = jnp.ones((B, L), table.dtype)
+    live = bag_ids >= 0
+    rows = table[jnp.maximum(bag_ids, 0)]                   # [B, L, F]
+    rows = rows * (weights * live)[:, :, None]
+    return rows.sum(axis=1)

@@ -1,0 +1,105 @@
+"""Tiled flash attention (train/prefill path) with the Gemma feature set:
+causal masking, sliding-window (local) attention, logit soft-capping, GQA.
+
+Standard FlashAttention-2 tiling adapted to TPU: Tq x Tk tiles sized to the
+MXU (128 x 128 default), online-softmax state (m, l, acc) in VMEM scratch
+persisting across the kv grid dimension.  On TPU the kv-stream tiles are
+fetched by the automatic sequential pipeline (the "hardware prefetch"
+analogue — attention is the contiguous-scan case where All-Hard wins, per
+the tuner's taxonomy), so no scalar prefetch is needed here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int, softcap: float,
+            tq: int, tk: int, nk: int, seq_len: int):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # [Tq, D]
+    k = k_ref[0, 0].astype(jnp.float32)                 # [Tk, D]
+    v = v_ref[0, 0].astype(jnp.float32)                 # [Tk, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qi = iq * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+    ki = ik * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+    mask = ki < seq_len
+    if causal:
+        mask &= qi >= ki
+    if window > 0:
+        mask &= (qi - ki) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "tq", "tk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    scale: float, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, tq: int = 128, tk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B, H, S, D]; k, v: [B, KVH, S, D] with H % KVH == 0.
+
+    window > 0 enables sliding-window (local) attention; softcap > 0 the
+    Gemma-2 logit soft-capping.  S must be a multiple of max(tq, tk) (caller
+    pads).
+    """
+    B, H, S, D = q.shape
+    KVH = k.shape[1]
+    group = H // KVH
+    nq, nk = S // tq, S // tk
+    kern = functools.partial(_kernel, scale=scale, causal=causal,
+                             window=window, softcap=softcap, tq=tq, tk=tk,
+                             nk=nk, seq_len=S)
+    return pl.pallas_call(
+        kern,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, tq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, tk, D), lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, tk, D), lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq,), jnp.float32),
+            pltpu.VMEM((tq,), jnp.float32),
+            pltpu.VMEM((tq, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+        name="flash_attention",
+    )(q, k, v)

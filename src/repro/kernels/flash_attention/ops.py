@@ -1,0 +1,22 @@
+"""Dispatching wrapper: XLA oracle or Pallas flash attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "causal", "window", "softcap", "tq", "tk", "impl"))
+def attention(q, k, v, *, scale: float, causal: bool = True, window: int = 0,
+              softcap: float = 0.0, tq: int = 128, tk: int = 128,
+              impl: str = "xla"):
+    if impl == "xla":
+        return attention_ref(q, k, v, scale=scale, causal=causal,
+                             window=window, softcap=softcap)
+    return flash_attention(q, k, v, scale=scale, causal=causal, window=window,
+                           softcap=softcap, tq=tq, tk=tk,
+                           interpret=(impl == "pallas_interpret"))

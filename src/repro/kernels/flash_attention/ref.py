@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: dense softmax attention with GQA / window / softcap."""
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, scale, causal=True, window=0, softcap=0.0):
+    B, H, S, D = q.shape
+    KVH = k.shape[1]
+    group = H // KVH
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qi >= ki
+    if window > 0:
+        mask &= (qi - ki) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)

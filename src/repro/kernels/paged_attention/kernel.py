@@ -1,0 +1,110 @@
+"""Paged decode attention over a block-table KV cache (CBList for sequences).
+
+The KV cache lives in a page pool (the blockstore substrate); each sequence
+owns a *chain* of pages named by a block table — exactly CBList's per-vertex
+block chains, with "sequence grows by one token" playing the role of "vertex
+gains an edge".  At decode, fetching the pages of a sequence is pure pointer
+chasing: the page ids come from the block table, unpredictable to a
+sequential pipeline.  They are therefore scalar-prefetched
+(PrefetchScalarGridSpec) so the DMA engine fetches page ``bt[b, j+1]`` while
+the VPU/MXU reduces page ``bt[b, j]`` — the paper's coroutine interleaving,
+§5.1, applied to serving.
+
+Layout: k_pages/v_pages f32[KVH, P, page, D]; q grouped [B, KVH, G, D]
+(G = q heads per kv head); lengths i32[B]; block table i32[B, npages_max].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(lens_ref, bt_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, page: int, npages: int, scale: float, window: int,
+            softcap: float):
+    b, h, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seq_len = lens_ref[b]
+    q = q_ref[0, 0].astype(jnp.float32)            # [G, D]
+    k = k_ref[0, 0].astype(jnp.float32)            # [page, D]
+    v = v_ref[0, 0].astype(jnp.float32)            # [page, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    ki = j * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = ki < seq_len
+    if window > 0:
+        mask &= ki >= seq_len - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == npages - 1)
+    def _fin():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "softcap",
+                                             "interpret"))
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block_table: jax.Array, lengths: jax.Array, *,
+                    scale: float, window: int = 0, softcap: float = 0.0,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B, KVH, G, D]; pages: [KVH, P, page, D]; block_table: [B, NPmax];
+    lengths: [B].  Returns [B, KVH, G, D] attention over each sequence's
+    first ``lengths[b]`` cached tokens."""
+    B, KVH, G, D = q.shape
+    page = k_pages.shape[2]
+    npages = block_table.shape[1]
+    kern = functools.partial(_kernel, page=page, npages=npages, scale=scale,
+                             window=window, softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KVH, npages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, lens, bt: (b, h, 0, 0)),
+            # page ids are data-dependent -> scalar-prefetched pointer chase
+            pl.BlockSpec((1, 1, page, D),
+                         lambda b, h, j, lens, bt: (h, bt[b, j], 0, 0)),
+            pl.BlockSpec((1, 1, page, D),
+                         lambda b, h, j, lens, bt: (h, bt[b, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, j, lens, bt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="paged_attention",
+    )(lengths, block_table, q, k_pages, v_pages)

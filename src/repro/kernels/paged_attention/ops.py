@@ -1,0 +1,22 @@
+"""Dispatching wrapper for paged decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "softcap",
+                                             "impl"))
+def decode_attention(q, k_pages, v_pages, block_table, lengths, *,
+                     scale: float, window: int = 0, softcap: float = 0.0,
+                     impl: str = "xla"):
+    if impl == "xla":
+        return paged_attention_ref(q, k_pages, v_pages, block_table, lengths,
+                                   scale=scale, window=window, softcap=softcap)
+    return paged_attention(q, k_pages, v_pages, block_table, lengths,
+                           scale=scale, window=window, softcap=softcap,
+                           interpret=(impl == "pallas_interpret"))

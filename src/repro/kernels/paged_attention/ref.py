@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: gather pages densely, run masked attention."""
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_table, lengths, *,
+                        scale, window=0, softcap=0.0):
+    B, KVH, G, D = q.shape
+    page = k_pages.shape[2]
+    NP = block_table.shape[1]
+    # densify: [B, KVH, NP*page, D]
+    k = k_pages[:, block_table]            # [KVH, B, NP, page, D]
+    v = v_pages[:, block_table]
+    k = jnp.moveaxis(k, 0, 1).reshape(B, KVH, NP * page, D)
+    v = jnp.moveaxis(v, 0, 1).reshape(B, KVH, NP * page, D)
+    s = jnp.einsum("bhgd,bhkd->bhgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    ki = jnp.arange(NP * page)
+    mask = ki[None, :] < lengths[:, None]                 # [B, S]
+    if window > 0:
+        mask &= ki[None, :] >= (lengths[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgk,bhkd->bhgd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.segment_matmul.ops import segment_matmul
+from repro.kernels.segment_matmul.ref import segment_sum_ref

@@ -1,0 +1,89 @@
+"""GTChain segment-sum Pallas kernel (the paper's interleaved-execution port).
+
+Computes ``y[r] = sum_{e: seg[e]==r} data[e]`` over an edge stream sorted by
+destination row, blocked exactly like CBList: the grid walks edge *tiles*
+(``tile`` edges each) while a **scalar-prefetched** stream ``out_idx`` names
+the output row-block each tile accumulates into.
+
+Prefetch co-design, stated in TPU terms:
+
+  * the *data* tiles stream sequentially (BlockSpec ``i -> (i, 0)``) — the
+    hardware-prefetch analogue; Pallas double-buffers the next tile's DMA
+    automatically while the MXU reduces the current one;
+  * the *output* block indices are data-dependent (pointer-chasing in the
+    paper) — they are delivered through ``PrefetchScalarGridSpec`` so the
+    pipeline knows future destinations ahead of time and can schedule the
+    output-block DMAs early: this is the software-prefetch-via-coroutines
+    mechanism (§5.1) without coroutines;
+  * consecutive tiles hitting the same output block revisit it in VMEM —
+    the accumulation never round-trips HBM (the GTChain sortedness is what
+    makes the revisit pattern dense).
+
+The segment reduction itself is a one-hot matmul so it runs on the MXU
+(128x128 systolic array) instead of the scatter unit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(out_idx_ref, rows_ref, data_ref, o_ref, *, rows_per_block: int,
+            tile: int):
+    i = pl.program_id(0)
+    first = (i == 0) | (out_idx_ref[i] != out_idx_ref[jnp.maximum(i - 1, 0)])
+    local = rows_ref[...] - out_idx_ref[i] * rows_per_block
+    onehot = (local[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (tile, rows_per_block), 1)).astype(jnp.float32)
+    contrib = jnp.dot(onehot.T, data_ref[...],
+                      preferred_element_type=jnp.float32)
+
+    @pl.when(first)
+    def _init():
+        o_ref[...] = contrib
+
+    @pl.when(jnp.logical_not(first))
+    def _acc():
+        o_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("num_blocks", "rows_per_block",
+                                             "tile", "interpret"))
+def segment_matmul_sorted(out_idx: jax.Array, rows_p: jax.Array,
+                          data_p: jax.Array, *, num_blocks: int,
+                          rows_per_block: int = 8, tile: int = 128,
+                          interpret: bool = False) -> jax.Array:
+    """Run the kernel over a pre-padded sorted stream.
+
+    Args:
+      out_idx: i32[NT] output block per tile (scalar-prefetch stream).
+      rows_p:  i32[NT*tile] destination row per edge (-1 = hole).
+      data_p:  f32[NT*tile, F] edge payloads (0 in holes).
+    Returns f32[num_blocks*rows_per_block, F].
+    """
+    NT = out_idx.shape[0]
+    F = data_p.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(NT,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i, oi: (i,)),
+            pl.BlockSpec((tile, F), lambda i, oi: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_block, F), lambda i, oi: (oi[i], 0)),
+    )
+    kern = functools.partial(_kernel, rows_per_block=rows_per_block, tile=tile)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_blocks * rows_per_block, F),
+                                       jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="gtchain_segment_matmul",
+    )(out_idx, rows_p, data_p)

@@ -1,0 +1,47 @@
+"""Jit'd public wrapper: unsorted segment-sum -> sorted padded stream -> kernel.
+
+``segment_matmul(data, seg, num_rows)`` is a drop-in for
+``jax.ops.segment_sum`` with the GTChain layout contract enforced here
+(sort + per-output-block tile padding from :mod:`repro.kernels.common`).
+On non-TPU backends (or ``impl="xla"``) it falls back to the oracle —
+the tuner's All-Hard path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.segment_matmul.kernel import segment_matmul_sorted
+from repro.kernels.segment_matmul.ref import segment_sum_ref
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows", "rows_per_block",
+                                             "tile", "impl", "assume_sorted"))
+def segment_matmul(data: jax.Array, seg: jax.Array, num_rows: int, *,
+                   rows_per_block: int = 8, tile: int = 128,
+                   impl: str = "xla", assume_sorted: bool = False) -> jax.Array:
+    """Segment-sum of ``data`` rows by ``seg`` (GTChain block-parallel).
+
+    impl: "xla" (oracle / All-Hard), "pallas" (TPU), "pallas_interpret"
+    (kernel body on CPU, for validation).
+    """
+    if impl == "xla":
+        return segment_sum_ref(data, seg, num_rows)
+    if not assume_sorted:
+        # invalid / padding segments must sort LAST (ranks are positional)
+        key = jnp.where((seg >= 0) & (seg < num_rows), seg,
+                        jnp.iinfo(jnp.int32).max)
+        order = jnp.argsort(key)
+        seg = seg[order]
+        data = data[order]
+    out_idx, perm, rows_p, NT = common.pad_sorted_stream(
+        seg, num_rows, rows_per_block, tile)
+    data_p = common.apply_perm(perm, data)
+    out = segment_matmul_sorted(out_idx, rows_p, data_p,
+                                num_blocks=common.cdiv(num_rows, rows_per_block),
+                                rows_per_block=rows_per_block, tile=tile,
+                                interpret=(impl == "pallas_interpret"))
+    return out[:num_rows]

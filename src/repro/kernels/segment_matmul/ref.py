@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the GTChain segment-sum kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(data: jax.Array, seg: jax.Array, num_rows: int) -> jax.Array:
+    """y[r, :] = sum over edges e with seg[e] == r of data[e, :].
+
+    Out-of-range segment ids (padding) are dropped.
+    """
+    seg = jnp.where((seg >= 0) & (seg < num_rows), seg, num_rows)
+    return jax.ops.segment_sum(data, seg, num_segments=num_rows + 1)[:num_rows]

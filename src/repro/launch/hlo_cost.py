@@ -1,0 +1,219 @@
+"""Trip-count-aware cost extraction from compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once** (verified
+empirically — a scanned 8-layer stack reports 1/8 the FLOPs of the unrolled
+one), so scanned-layer models would be under-counted 10-60x.  This parser
+walks the HLO text, finds each while's ``known_trip_count`` backend config,
+and multiplies per-computation dot FLOPs and collective bytes accordingly.
+
+Outputs per module:
+  * flops            — 2 * prod(out) * prod(contracting) per dot, x trip
+  * collectives      — list of {op, operand_bytes, output_bytes, group, mult}
+  * per-type byte totals (operand-size convention, per the brief)
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                   "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO shape string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str):
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def parse_hlo(hlo_text: str) -> Dict:
+    # ---- split into computations -----------------------------------------
+    comp_name = None
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    for line in hlo_text.splitlines():
+        stripped = re.sub(r"/\*.*?\*/", "", line).strip()
+        # computation headers end with "{" and are not instructions
+        if (stripped.endswith("{") and " = " not in stripped
+                and not stripped.startswith("HloModule")):
+            m = re.match(r"(ENTRY\s+)?%?([\w\.\-]+)\s*\(", stripped)
+            if m:
+                comp_name = m.group(2)
+                comps[comp_name] = []
+                if m.group(1):
+                    entry = comp_name
+                continue
+        if stripped.startswith("}"):
+            comp_name = None
+            continue
+        if comp_name is not None:
+            comps[comp_name].append(stripped)
+
+    # ---- instruction shapes (global name -> shape string) ----------------
+    shapes: Dict[str, str] = {}
+    instr_re = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+)")
+    for cname, lines in comps.items():
+        for ln in lines:
+            m = instr_re.match(ln)
+            if m:
+                shapes[m.group(1)] = m.group(2)
+
+    # ---- while trip counts -> per-computation multipliers ----------------
+    mult: Dict[str, float] = defaultdict(lambda: 1.0)
+    mult[entry] = 1.0
+    # iterate a few times to propagate nesting
+    for _ in range(4):
+        for cname, lines in comps.items():
+            base = mult[cname]
+            for ln in lines:
+                wm = re.search(r"\bwhile\(", ln)
+                if wm:
+                    bm = re.search(r"body=%?([\w\.\-]+)", ln)
+                    cm = re.search(r"condition=%?([\w\.\-]+)", ln)
+                    tm = re.search(r'known_trip_count[^\d]*(\d+)', ln)
+                    trip = int(tm.group(1)) if tm else 1
+                    if bm:
+                        mult[bm.group(1)] = base * trip
+                    if cm:
+                        mult[cm.group(1)] = base * trip
+                for kind in ("call", "fusion", "conditional", "map",
+                             "reduce", "sort", "scatter", "select-and-scatter"):
+                    if f" {kind}(" in ln or ln.startswith(f"{kind}("):
+                        for cc in re.findall(r"(?:to_apply|calls)=%?([\w\.\-]+)", ln):
+                            mult[cc] = max(mult[cc], base) if cc in mult else base
+
+    # ---- dots -------------------------------------------------------------
+    flops = 0.0
+    dot_re = re.compile(
+        r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\S+)\s+dot\(\s*%?([\w\.\-]+)")
+    for cname, lines in comps.items():
+        m_c = mult[cname]
+        for ln in lines:
+            dm = dot_re.match(ln)
+            if not dm:
+                continue
+            out_shape = _shape_dims(dm.group(2)) or []
+            out_n = 1
+            for d in out_shape:
+                out_n *= d
+            lhs = dm.group(3)
+            lhs_dims = _shape_dims(shapes.get(lhs, "")) or []
+            cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
+            contract = 1
+            if cm and lhs_dims:
+                for d in cm.group(1).split(","):
+                    if d and int(d) < len(lhs_dims):
+                        contract *= lhs_dims[int(d)]
+            flops += 2.0 * out_n * contract * m_c
+
+    # ---- collectives -------------------------------------------------------
+    colls = []
+    for cname, lines in comps.items():
+        m_c = mult[cname]
+        for ln in lines:
+            for op in _COLLECTIVE_OPS:
+                # match "op(" or "op-start("
+                mm = re.match(
+                    r"^(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\([^=]*?\)|\S+)\s+"
+                    + op + r"(?:-start)?\(([^)]*)\)", ln)
+                if not mm:
+                    continue
+                out_bytes = _shape_bytes(mm.group(1))
+                operands = [o.strip().lstrip("%")
+                            for o in mm.group(2).split(",") if o.strip()]
+                op_bytes = sum(_shape_bytes(shapes.get(o, ""))
+                               for o in operands)
+                gm = re.search(r"replica_groups=\{?\{([\d,]*)\}", ln)
+                group = len(gm.group(1).split(",")) if gm else 0
+                if group == 0:
+                    gm2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", ln)
+                    group = int(gm2.group(2)) if gm2 else 1
+                colls.append({"op": op, "operand_bytes": op_bytes,
+                              "output_bytes": out_bytes, "group": group,
+                              "mult": m_c, "comp": cname})
+                break
+
+    by_type = defaultdict(float)
+    for c in colls:
+        by_type[c["op"]] += c["operand_bytes"] * c["mult"]
+
+    # ---- memory-traffic model (GEMM-centric, TPU-fused assumption) ---------
+    # On TPU, elementwise chains fuse into their producers/consumers, so HBM
+    # traffic is dominated by (a) matmul operand/output movement, (b) data-
+    # movement ops (gather/scatter/slice/DUS/sort/concat/copy), (c)
+    # collectives, (d) one read of the entry parameters.  CPU-HLO fusion
+    # boundaries and loop-carry tuples are ignored (they alias in place).
+    # Structural estimate, trip-count-corrected; documented in
+    # EXPERIMENTS.md §Roofline.
+    _MOVE2 = {"gather", "scatter", "dynamic-slice", "dynamic-update-slice",
+              "sort", "concatenate", "pad", "slice", "reverse", "copy",
+              "select-and-scatter", "reduce", "reduce-window",
+              "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute", "rng", "rng-bit-generator", "cholesky",
+              "triangular-solve", "fft"}
+    mem_bytes = 0.0
+    param_bytes = 0.0
+    op_re = re.compile(
+        r"^(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+)"
+        r"\(([^)]*)\)?")
+    for cname, lines in comps.items():
+        m_c = mult[cname]
+        for ln in lines:
+            m = op_re.match(ln)
+            if not m:
+                continue
+            out_shape, op, args = m.group(1), m.group(2), m.group(3)
+            if op == "parameter":
+                if cname == entry:
+                    param_bytes += _shape_bytes(out_shape)
+                continue
+            if op in ("dot", "convolution"):
+                operands = [o.strip().lstrip("%")
+                            for o in args.split(",") if o.strip()]
+                in_b = sum(_shape_bytes(shapes.get(o, ""))
+                           for o in operands[:2])
+                mem_bytes += (_shape_bytes(out_shape) + in_b) * m_c
+            elif op == "dynamic-update-slice":
+                # aliased in place: traffic = the update slice, not the buffer
+                operands = [o.strip().lstrip("%")
+                            for o in args.split(",") if o.strip()]
+                upd = _shape_bytes(shapes.get(operands[1], "")) \
+                    if len(operands) > 1 else 0
+                mem_bytes += 2.0 * upd * m_c
+            elif op == "scatter":
+                operands = [o.strip().lstrip("%")
+                            for o in args.split(",") if o.strip()]
+                upd = _shape_bytes(shapes.get(operands[-1], ""))
+                mem_bytes += 2.0 * upd * m_c
+            elif op in _MOVE2 or op.endswith("-start"):
+                mem_bytes += 2.0 * _shape_bytes(out_shape) * m_c
+
+    return {"flops": flops,
+            "collectives": colls,
+            "collective_bytes_by_type": dict(by_type),
+            "collective_bytes_total": float(sum(by_type.values())),
+            "memory_bytes": mem_bytes + param_bytes,
+            "param_bytes": param_bytes}

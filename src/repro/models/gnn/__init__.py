@@ -1,0 +1,2 @@
+from repro.models.gnn.common import GraphBatch
+from repro.models.gnn import gin, pna, egnn, equiformer_v2, so3

@@ -1,0 +1,116 @@
+"""GNN substrate: padded-COO graph batches + segment message passing.
+
+JAX sparse is BCOO-only, so message passing is implemented directly as
+gather -> transform -> ``segment_sum``/``segment_max`` over an edge index
+(kernel taxonomy §GNN).  The scatter side dispatches to the GTChain
+``segment_matmul`` Pallas kernel when edges are destination-sorted (which
+:func:`repro.core.cblist.to_coo` guarantees for CBList-resident graphs —
+the storage/compute co-design paying off in the model layer).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_matmul import segment_matmul
+
+
+class GraphBatch(NamedTuple):
+    """Fixed-shape (padded) graph batch.
+
+    For batched small graphs, nodes of all graphs are flattened and
+    ``graph_id`` routes pooling; for single graphs graph_id == 0.
+    """
+    x: jax.Array                      # f32[N, F] node features
+    edge_src: jax.Array               # i32[E]
+    edge_dst: jax.Array               # i32[E]
+    edge_valid: jax.Array             # bool[E]
+    node_valid: jax.Array             # bool[N]
+    graph_id: jax.Array               # i32[N]
+    pos: Optional[jax.Array] = None   # f32[N, 3] (geometric models)
+    edge_attr: Optional[jax.Array] = None  # f32[E, Fe]
+    labels: Optional[jax.Array] = None     # i32[N] or f32[G]
+
+    @property
+    def num_nodes(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def num_graphs(self) -> int:
+        return int(self.graph_id.max()) + 1 if self.graph_id.size else 1
+
+
+def scatter_sum(msg: jax.Array, dst: jax.Array, valid: jax.Array, n: int,
+                impl: str = "xla") -> jax.Array:
+    """sum_{e: dst[e]==v} msg[e]  — the GNN aggregation primitive."""
+    seg = jnp.where(valid, dst, n)
+    if impl == "xla":
+        return jax.ops.segment_sum(msg, seg, num_segments=n + 1)[:n]
+    return segment_matmul(msg, seg, n, impl=impl)
+
+
+def scatter_mean(msg, dst, valid, n, impl="xla"):
+    s = scatter_sum(msg, dst, valid, n, impl)
+    c = scatter_sum(jnp.ones((msg.shape[0], 1), msg.dtype), dst, valid, n, impl)
+    return s / jnp.maximum(c, 1.0)
+
+
+def scatter_max(msg, dst, valid, n):
+    seg = jnp.where(valid, dst, n)
+    out = jax.ops.segment_max(jnp.where(valid[:, None], msg, -jnp.inf),
+                              seg, num_segments=n + 1)[:n]
+    return jnp.where(jnp.isfinite(out), out, 0.0)
+
+
+def scatter_min(msg, dst, valid, n):
+    seg = jnp.where(valid, dst, n)
+    out = jax.ops.segment_min(jnp.where(valid[:, None], msg, jnp.inf),
+                              seg, num_segments=n + 1)[:n]
+    return jnp.where(jnp.isfinite(out), out, 0.0)
+
+
+def segment_softmax(scores: jax.Array, dst: jax.Array, valid: jax.Array,
+                    n: int) -> jax.Array:
+    """Edge softmax over incoming edges per destination (GAT/Equiformer)."""
+    seg = jnp.where(valid, dst, n)
+    mx = jax.ops.segment_max(jnp.where(valid, scores, -jnp.inf), seg,
+                             num_segments=n + 1)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    ex = jnp.where(valid, jnp.exp(scores - mx[jnp.minimum(seg, n)]), 0.0)
+    den = jax.ops.segment_sum(ex, seg, num_segments=n + 1)
+    return ex / jnp.maximum(den[jnp.minimum(seg, n)], 1e-16)
+
+
+def in_degree(g: GraphBatch) -> jax.Array:
+    return scatter_sum(jnp.ones((g.edge_src.shape[0], 1), jnp.float32),
+                       g.edge_dst, g.edge_valid, g.num_nodes)[:, 0]
+
+
+def graph_pool(h: jax.Array, graph_id: jax.Array, node_valid: jax.Array,
+               num_graphs: int, mode: str = "mean") -> jax.Array:
+    seg = jnp.where(node_valid, graph_id, num_graphs)
+    s = jax.ops.segment_sum(h, seg, num_segments=num_graphs + 1)[:num_graphs]
+    if mode == "sum":
+        return s
+    c = jax.ops.segment_sum(node_valid.astype(h.dtype), seg,
+                            num_segments=num_graphs + 1)[:num_graphs]
+    return s / jnp.maximum(c[:, None], 1.0)
+
+
+def mlp_params(key, dims, dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": (jax.random.normal(k, (a, b), jnp.float32)
+                   * (2.0 / a) ** 0.5).astype(dtype),
+             "b": jnp.zeros((b,), dtype)}
+            for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def mlp_apply(params, x, act=jax.nn.silu, final_act=False):
+    for i, p in enumerate(params):
+        x = x @ p["w"] + p["b"]
+        if i < len(params) - 1 or final_act:
+            x = act(x)
+    return x

@@ -1,0 +1,81 @@
+"""PNA (Principal Neighbourhood Aggregation) — arXiv:2004.05718.
+
+Four aggregators (mean, max, min, std) x three degree scalers
+(identity, amplification, attenuation) -> 12-way concatenation -> linear.
+Config pna: 4 layers, d_hidden=75.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import (GraphBatch, graph_pool, in_degree,
+                                     mlp_apply, mlp_params, scatter_max,
+                                     scatter_mean, scatter_min, scatter_sum)
+
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    name: str = "pna"
+    n_layers: int = 4
+    d_hidden: int = 75
+    d_in: int = 75
+    n_classes: int = 16
+    delta: float = 2.5                # avg log-degree normalizer
+    graph_level: bool = False
+
+
+def init_params(key, cfg: PNAConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    layers = []
+    for i in range(cfg.n_layers):
+        d_in = cfg.d_in if i == 0 else cfg.d_hidden
+        layers.append({
+            "pre": mlp_params(ks[i], (2 * d_in, cfg.d_hidden)),       # message
+            "post": mlp_params(jax.random.fold_in(ks[i], 1),
+                               (12 * cfg.d_hidden + d_in, cfg.d_hidden)),
+        })
+    return {"layers": layers,
+            "head": mlp_params(ks[-1], (cfg.d_hidden, cfg.n_classes))}
+
+
+def forward(params, cfg: PNAConfig, g: GraphBatch, impl: str = "xla"):
+    h = g.x
+    n = g.num_nodes
+    deg = in_degree(g)
+    logd = jnp.log1p(deg)
+    amp = (logd / cfg.delta)[:, None]
+    att = (cfg.delta / jnp.maximum(logd, 1e-3))[:, None]
+    for lp in params["layers"]:
+        msg = mlp_apply(lp["pre"],
+                        jnp.concatenate([h[g.edge_src], h[g.edge_dst]], -1),
+                        final_act=True)
+        mean = scatter_mean(msg, g.edge_dst, g.edge_valid, n, impl)
+        mx = scatter_max(msg, g.edge_dst, g.edge_valid, n)
+        mn = scatter_min(msg, g.edge_dst, g.edge_valid, n)
+        sq = scatter_mean(msg * msg, g.edge_dst, g.edge_valid, n, impl)
+        std = jnp.sqrt(jnp.maximum(sq - mean * mean, 0.0) + 1e-5)
+        aggs = jnp.concatenate([mean, mx, mn, std], axis=-1)     # [N, 4d]
+        scaled = jnp.concatenate([aggs, aggs * amp, aggs * att], -1)  # 12d
+        h = mlp_apply(lp["post"], jnp.concatenate([scaled, h], -1),
+                      final_act=True)
+        h = jnp.where(g.node_valid[:, None], h, 0.0)
+    if cfg.graph_level:
+        ng = g.labels.shape[0] if g.labels is not None else 1
+        pooled = graph_pool(h, g.graph_id, g.node_valid, ng)
+        return mlp_apply(params["head"], pooled)
+    return mlp_apply(params["head"], h)
+
+
+def loss_fn(params, cfg: PNAConfig, g: GraphBatch, impl: str = "xla"):
+    logits = forward(params, cfg, g, impl)
+    if cfg.graph_level:
+        return jnp.mean((logits[:, 0] - g.labels) ** 2)
+    mask = g.node_valid & (g.labels >= 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(g.labels, 0)[:, None],
+                             axis=-1)[:, 0]
+    return jnp.where(mask, logz - ll, 0.0).sum() / jnp.maximum(mask.sum(), 1)

@@ -1,0 +1,172 @@
+"""Real spherical-harmonic algebra for EquiformerV2 / eSCN (l_max <= 6).
+
+Provides:
+  * real spherical harmonics Y_lm(r) via stable recurrences,
+  * Wigner-D rotation matrices for the real SH basis using the e3nn J-matrix
+    trick  D(a, b, c) = Dz(a) . J . Dz(b) . J . Dz(c),  with J = d(pi/2)
+    precomputed numerically from the complex Wigner-d formula,
+  * the edge-alignment rotation (map edge direction to +z) that enables the
+    eSCN O(L^6) -> O(L^3) tensor-product reduction (arXiv:2306.12059).
+
+J matrices are computed once in float64 numpy at import of the arch (exact
+factorial sums, stable for l <= ~10) and baked as constants into the traced
+graph.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# complex Wigner-d and real-basis conversion (numpy, init-time only)
+# ---------------------------------------------------------------------------
+
+def _wigner_d_complex(l: int, beta: float) -> np.ndarray:
+    """d^l_{m',m}(beta) by Wigner's explicit factorial sum (complex basis)."""
+    d = np.zeros((2 * l + 1, 2 * l + 1))
+    cb, sb = math.cos(beta / 2), math.sin(beta / 2)
+    for i, mp in enumerate(range(-l, l + 1)):
+        for j, m in enumerate(range(-l, l + 1)):
+            pref = math.sqrt(math.factorial(l + mp) * math.factorial(l - mp)
+                             * math.factorial(l + m) * math.factorial(l - m))
+            s = 0.0
+            kmin = max(0, m - mp)
+            kmax = min(l - mp, l + m)
+            for k in range(kmin, kmax + 1):
+                num = (-1.0) ** (mp - m + k)
+                den = (math.factorial(l + m - k) * math.factorial(k)
+                       * math.factorial(mp - m + k) * math.factorial(l - mp - k))
+                s += num / den * cb ** (2 * l + m - mp - 2 * k) \
+                    * sb ** (mp - m + 2 * k)
+            d[i, j] = pref * s
+    return d
+
+
+def _complex_to_real_U(l: int) -> np.ndarray:
+    """Unitary map from complex SH basis (m = -l..l, CS phase) to real SH."""
+    n = 2 * l + 1
+    U = np.zeros((n, n), complex)
+    s2 = 1.0 / math.sqrt(2.0)
+    for i, m in enumerate(range(-l, l + 1)):
+        if m < 0:
+            U[i, l + m] = 1j * s2
+            U[i, l - m] = -1j * s2 * (-1) ** m
+        elif m == 0:
+            U[i, l] = 1.0
+        else:
+            U[i, l - m] = s2
+            U[i, l + m] = s2 * (-1) ** m
+    return U
+
+
+def _z_rot_np(l: int, angle: float) -> np.ndarray:
+    """numpy twin of z_rot_angles (init-time only)."""
+    n = 2 * l + 1
+    m = np.arange(-l, l + 1)
+    D = np.cos(m * angle)[:, None] * np.eye(n) \
+        - np.sin(m * angle)[:, None] * np.eye(n)[::-1]
+    return D
+
+
+@functools.lru_cache(maxsize=None)
+def J_matrix(l: int) -> np.ndarray:
+    """The e3nn-style involution J_l = D(R_pi about (y+z)/sqrt(2)).
+
+    J maps the z-axis to the y-axis and J^2 = I, so
+    D(Ry(beta)) = J Dz(beta) J and the zyz Euler decomposition becomes
+    D(a, b, c) = Dz(a) J Dz(b) J Dz(c).
+    Built as Dz(pi/2) . D(Ry(pi/2)) . Dz(pi/2) with D(Ry) from the complex
+    Wigner-d formula transformed to the real basis.
+    """
+    d = _wigner_d_complex(l, math.pi / 2)
+    U = _complex_to_real_U(l)
+    Jy = U @ d @ U.conj().T                       # D(Ry(pi/2)), real
+    assert np.abs(Jy.imag).max() < 1e-9, f"J_{l} not real"
+    Z = _z_rot_np(l, math.pi / 2)
+    J = Z @ Jy.real @ Z
+    assert np.abs(J @ J - np.eye(2 * l + 1)).max() < 1e-9, f"J_{l}^2 != I"
+    return np.ascontiguousarray(J)
+
+
+# ---------------------------------------------------------------------------
+# jax-side rotations
+# ---------------------------------------------------------------------------
+
+def z_rot_angles(l: int, angle: jax.Array) -> jax.Array:
+    """Dz(angle) for real SH of degree l: [..., 2l+1, 2l+1].
+
+    Real-basis z-rotation: m=0 fixed; (+m, -m) pairs rotate by m*angle.
+    Basis order m = -l..l.
+    """
+    m = jnp.arange(-l, l + 1)
+    shape = angle.shape
+    ang = angle[..., None] * m                                  # [..., 2l+1]
+    cos = jnp.cos(ang)
+    sin = jnp.sin(ang)
+    n = 2 * l + 1
+    eye = jnp.eye(n)
+    rev = eye[::-1]                                             # maps m -> -m
+    # vector-rep convention Y(R r) = D(R) Y(r):
+    # row m: cos(m a) on the diagonal, -sin(m a) on the antidiagonal
+    # (checked against the explicit l=1 rep in the (y, z, x) basis)
+    D = cos[..., :, None] * eye - sin[..., :, None] * rev
+    return D
+
+
+def wigner_D(l: int, alpha: jax.Array, beta: jax.Array,
+             gamma: jax.Array) -> jax.Array:
+    """Real Wigner-D^l(alpha, beta, gamma) = Dz(a) J Dz(b) J Dz(c)."""
+    J = jnp.asarray(J_matrix(l), jnp.float32)
+    Da = z_rot_angles(l, alpha)
+    Db = z_rot_angles(l, beta)
+    Dc = z_rot_angles(l, gamma)
+    return Da @ (J @ (Db @ (J @ Dc)))
+
+
+def edge_align_angles(vec: jax.Array):
+    """Angles (alpha, beta) such that R(alpha, beta, 0) maps +z to vec/|vec|.
+
+    The eSCN frame: rotate features by D(0, -beta, -alpha) to put the edge on
+    +z; rotate back with D(alpha, beta, 0).
+    """
+    x, y, z = vec[..., 0], vec[..., 1], vec[..., 2]
+    r = jnp.sqrt(x * x + y * y + z * z) + 1e-12
+    beta = jnp.arccos(jnp.clip(z / r, -1.0, 1.0))
+    alpha = jnp.arctan2(y, x)
+    return alpha, beta
+
+
+def rotate_to_edge(l: int, feats: jax.Array, alpha, beta) -> jax.Array:
+    """feats: [..., 2l+1, C] in lab frame -> edge frame (edge on +z)."""
+    D = wigner_D(l, jnp.zeros_like(alpha), -beta, -alpha)
+    return jnp.einsum("...ij,...jc->...ic", D, feats)
+
+
+def rotate_from_edge(l: int, feats: jax.Array, alpha, beta) -> jax.Array:
+    D = wigner_D(l, alpha, beta, jnp.zeros_like(alpha))
+    return jnp.einsum("...ij,...jc->...ic", D, feats)
+
+
+# ---------------------------------------------------------------------------
+# real spherical harmonics (for completeness / tests)
+# ---------------------------------------------------------------------------
+
+def real_sph_harm(l_max: int, vec: jax.Array) -> jax.Array:
+    """Y_lm stacked over (l, m) -> [..., (l_max+1)^2], unnormalized directions ok.
+
+    Computed by rotating the canonical +z harmonic with Wigner-D: Y(R z) =
+    D(R) Y(z); Y_l(z) is the unit vector at m=0 scaled by sqrt((2l+1)/4pi).
+    """
+    alpha, beta = edge_align_angles(vec)
+    outs = []
+    for l in range(l_max + 1):
+        e = jnp.zeros((2 * l + 1,), jnp.float32).at[l].set(
+            math.sqrt((2 * l + 1) / (4 * math.pi)))
+        D = wigner_D(l, alpha, beta, jnp.zeros_like(alpha))
+        outs.append(jnp.einsum("...ij,j->...i", D, e))
+    return jnp.concatenate(outs, axis=-1)

@@ -1,0 +1,2 @@
+from repro.models.recsys import sasrec
+from repro.models.recsys.sasrec import SASRecConfig

@@ -1,0 +1,2 @@
+from repro.models.transformer.layers import LMConfig
+from repro.models.transformer import model, kvcache

@@ -1,0 +1,98 @@
+"""Paged KV cache: CBList's dynamic storage discipline applied to serving.
+
+A sequence's KV history is a *chain of pages* in a fixed pool, exactly like
+a vertex's edge blocks in CBList: appending a token ≙ inserting an edge
+(fill tail slack, else pop a page from the free stack); the block table is
+the per-owner chain; decode attention fetches the chain through the
+scalar-prefetched ``paged_attention`` kernel.  Pure-functional: append
+returns a new cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention import decode_attention
+
+
+class PagedKVCache(NamedTuple):
+    k_pages: jax.Array      # [KVH, P, page, D]
+    v_pages: jax.Array      # [KVH, P, page, D]
+    block_table: jax.Array  # i32[B, NP_max]  (-1 = unallocated)
+    lengths: jax.Array      # i32[B]
+    free_stack: jax.Array   # i32[P]
+    free_top: jax.Array     # i32[]
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pages.shape[2]
+
+
+def init_paged_cache(batch: int, n_kv_heads: int, head_dim: int,
+                     num_pages: int, page_size: int = 128,
+                     max_pages_per_seq: int = 0,
+                     dtype=jnp.bfloat16) -> PagedKVCache:
+    npmax = max_pages_per_seq or num_pages // batch
+    return PagedKVCache(
+        k_pages=jnp.zeros((n_kv_heads, num_pages, page_size, head_dim), dtype),
+        v_pages=jnp.zeros((n_kv_heads, num_pages, page_size, head_dim), dtype),
+        block_table=jnp.full((batch, npmax), -1, jnp.int32),
+        lengths=jnp.zeros((batch,), jnp.int32),
+        free_stack=jnp.arange(num_pages - 1, -1, -1, dtype=jnp.int32),
+        free_top=jnp.asarray(num_pages, jnp.int32),
+    )
+
+
+@jax.jit
+def append(cache: PagedKVCache, k_new: jax.Array,
+           v_new: jax.Array) -> PagedKVCache:
+    """Append one token's K/V per sequence.  k_new/v_new: [B, KVH, D]."""
+    B = k_new.shape[0]
+    page = cache.page_size
+    P = cache.k_pages.shape[1]
+    need = (cache.lengths % page) == 0                      # new page needed
+    # vectorized free-stack pop (same trick as blockstore.alloc_blocks)
+    rank = jnp.cumsum(need.astype(jnp.int32)) - need.astype(jnp.int32)
+    idx = cache.free_top - 1 - rank
+    new_page = jnp.where(need & (idx >= 0),
+                         cache.free_stack[jnp.maximum(idx, 0)], P)
+    free_top = cache.free_top - need.sum(dtype=jnp.int32)
+
+    slot = jnp.minimum(cache.lengths // page, cache.block_table.shape[1] - 1)
+    b_idx = jnp.arange(B)
+    old = cache.block_table[b_idx, slot]
+    bt = cache.block_table.at[b_idx, slot].set(
+        jnp.where(need, new_page, old))
+
+    page_id = bt[b_idx, slot]                               # P if alloc failed
+    offset = cache.lengths % page
+    # scatter: pages[kvh, page_id[b], offset[b], :] = new[b, kvh, :]
+    kvh = k_new.shape[1]
+    h_idx = jnp.broadcast_to(jnp.arange(kvh)[None, :], (B, kvh))
+    p_idx = jnp.broadcast_to(jnp.where(page_id < 0, P, page_id)[:, None],
+                             (B, kvh))
+    o_idx = jnp.broadcast_to(offset[:, None], (B, kvh))
+    k_pages = cache.k_pages.at[h_idx, p_idx, o_idx, :].set(k_new, mode="drop")
+    v_pages = cache.v_pages.at[h_idx, p_idx, o_idx, :].set(v_new, mode="drop")
+    return cache._replace(k_pages=k_pages, v_pages=v_pages, block_table=bt,
+                          lengths=cache.lengths + 1, free_stack=cache.free_stack,
+                          free_top=free_top)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "softcap",
+                                             "impl"))
+def attend(cache: PagedKVCache, q: jax.Array, *, scale: float,
+           window: int = 0, softcap: float = 0.0,
+           impl: str = "xla") -> jax.Array:
+    """q: [B, H, D] (one token per sequence) -> [B, H, D]."""
+    B, H, D = q.shape
+    KVH = cache.k_pages.shape[0]
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, D)
+    bt = jnp.maximum(cache.block_table, 0)
+    o = decode_attention(qg, cache.k_pages, cache.v_pages, bt, cache.lengths,
+                         scale=scale, window=window, softcap=softcap, impl=impl)
+    return o.reshape(B, H, D)

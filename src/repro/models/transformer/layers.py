@@ -1,0 +1,377 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (local/global,
+softcap, bias), SwiGLU MLP, and capacity-bucket MoE with top-k routing.
+
+Pure-functional: params are nested dicts of arrays; every init_* returns a
+param pytree, every apply_* is jit-traceable.  The attention dispatch obeys
+the kernel taxonomy: XLA einsum path (oracle; used for dry-run lowering) or
+the Pallas flash kernel (TPU).  MoE dispatch is the sorted capacity-bucket
+permute — the token->expert scatter is the same irregular access pattern as
+CBList's sorted batch updates (classify by key, then contiguous placement),
+which is why it shares the segment/sort machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import attention as flash_attention
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0                      # 0 -> d_model // n_heads
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    # attention features
+    qkv_bias: bool = False
+    window_pattern: Tuple[int, ...] = (0,)   # per-layer sliding window, 0=global;
+    # repeated cyclically over layers (gemma2: (4096, 0); gemma3: (1024,)*5+(0,))
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    # serving
+    kv_page_size: int = 128
+    # beyond-paper SPMD optimization (EXPERIMENTS.md §Perf): when set to the
+    # mesh's batch axes (e.g. ("data",) or ("pod", "data")), activation
+    # sharding constraints pin attention/MoE intermediates so GSPMD never
+    # falls back to replicated ("involuntary full rematerialization")
+    act_shard_axes: Any = None
+    model_axis_size: int = 16
+    data_axis_size: int = 16          # product of act_shard_axes sizes
+    ep_shard_map: bool = False        # shard_map MoE dispatch (§Perf iter 3)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def layer_windows(self) -> Tuple[int, ...]:
+        p = self.window_pattern
+        return tuple(p[i % len(p)] for i in range(self.n_layers))
+
+    @property
+    def period(self) -> int:
+        return len(self.window_pattern)
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"])
+    return out.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs     # [..., S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _dense(key, shape, dtype, scale=None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(shape[0]))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: LMConfig) -> Params:
+    d, h, kvh, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense(ks[0], (d, h * dh), cfg.dtype),
+        "wk": _dense(ks[1], (d, kvh * dh), cfg.dtype),
+        "wv": _dense(ks[2], (d, kvh * dh), cfg.dtype),
+        "wo": _dense(ks[3], (h * dh, d), cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), cfg.dtype)
+        p["bk"] = jnp.zeros((kvh * dh,), cfg.dtype)
+        p["bv"] = jnp.zeros((kvh * dh,), cfg.dtype)
+    return p
+
+
+def qkv_proj(p: Params, cfg: LMConfig, x: jax.Array):
+    B, S, _ = x.shape
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, h, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, kvh, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, kvh, dh).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def _wsc(x, spec):
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def apply_attention(p: Params, cfg: LMConfig, x: jax.Array, positions,
+                    window: int, impl: str = "xla") -> jax.Array:
+    """Causal self-attention over [B, S, d] (train / prefill path)."""
+    B, S, _ = x.shape
+    q, k, v = qkv_proj(p, cfg, x)
+    if cfg.act_shard_axes:
+        ba = tuple(cfg.act_shard_axes)
+        if cfg.n_heads % cfg.model_axis_size == 0:
+            # head-parallel attention (Megatron): q heads over "model"
+            q = _wsc(q, (ba, "model", None, None))
+        else:
+            # context-parallel fallback: q sequence over "model"
+            q = _wsc(q, (ba, None, "model", None))
+        k = _wsc(k, (ba, None, None, None))
+        v = _wsc(v, (ba, None, None, None))
+    q = rope(q, positions[:, None, :], cfg.rope_theta)
+    k = rope(k, positions[:, None, :], cfg.rope_theta)
+    scale = cfg.head_dim ** -0.5
+    o = flash_attention(q, k, v, scale=scale, causal=True, window=window,
+                        softcap=cfg.attn_softcap, impl=impl)
+    if cfg.act_shard_axes:
+        # pin the attention output like q so the backward dots inherit the
+        # same partitioning (kills the bwd involuntary-remat copies)
+        ba = tuple(cfg.act_shard_axes)
+        if cfg.n_heads % cfg.model_axis_size == 0:
+            o = _wsc(o, (ba, "model", None, None))
+        else:
+            o = _wsc(o, (ba, None, "model", None))
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    out = o @ p["wo"]
+    if cfg.act_shard_axes:
+        out = _wsc(out, (tuple(cfg.act_shard_axes), None, None))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# dense MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: LMConfig, d_ff: Optional[int] = None) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": _dense(ks[0], (d, f), cfg.dtype),
+        "wg": _dense(ks[1], (d, f), cfg.dtype),
+        "wo": _dense(ks[2], (f, d), cfg.dtype),
+    }
+
+
+def apply_mlp(p: Params, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k routing, capacity buckets, EP-shardable)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: LMConfig) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense(ks[0], (d, e), jnp.float32),
+        "wi": _dense(ks[1], (e, d, f), cfg.dtype),
+        "wg": _dense(ks[2], (e, d, f), cfg.dtype),
+        "wo": _dense(ks[3], (e, f, d), cfg.dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, cfg.d_ff * cfg.n_shared_experts)
+    return p
+
+
+def apply_moe_ep(p: Params, cfg: LMConfig, x: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE with shard_map dispatch/combine (§Perf iter 3).
+
+    GSPMD cannot prove the token->bucket scatter local, so the baseline
+    lowers it to a full-bucket all-reduce (242 GB/layer at kimi-prefill
+    scale; hypothesis log in EXPERIMENTS.md).  Here dispatch runs *inside*
+    shard_map over the data axes: every shard sorts only its own tokens into
+    per-shard capacity buckets (classify-by-source, the CBList discipline),
+    the expert GEMMs stay in GSPMD-land (E over "model", FSDP over "data"),
+    and the combine psums partial token outputs over "model" — total
+    cross-chip traffic per layer drops from O(E*C*d) to O(T_loc*d).
+    """
+    from jax.sharding import PartitionSpec as P
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    ba = tuple(cfg.act_shard_axes)
+    D = cfg.data_axis_size
+    T_loc = T // D
+    C_loc = min(T_loc, int(T_loc * K / E * cfg.capacity_factor) + 1)
+    MP = cfg.model_axis_size
+    E_per = E // MP
+    xt = x.reshape(T, d)
+    router = p["router"]
+
+    def dispatch(xt_loc):
+        """Per-data-shard routing + bucket fill (all local)."""
+        logits = xt_loc.astype(jnp.float32) @ router
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, eidx = jax.lax.top_k(probs, K)
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+        flat_e = eidx.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(T_loc, dtype=jnp.int32), K)
+        order = jnp.argsort(flat_e)
+        se, st = flat_e[order], flat_t[order]
+        estart = jnp.concatenate([
+            jnp.zeros((1,), jnp.int32),
+            jnp.cumsum(jnp.bincount(se, length=E))[:-1].astype(jnp.int32)])
+        rank = jnp.arange(T_loc * K, dtype=jnp.int32) - estart[se]
+        keep = rank < C_loc
+        slot = jnp.where(keep, se * C_loc + rank, E * C_loc)
+        xb_loc = jnp.zeros((E * C_loc, d), cfg.dtype).at[slot].set(
+            xt_loc[st].astype(cfg.dtype), mode="drop")
+        return (xb_loc.reshape(E, C_loc, d), se, st, rank,
+                gate.reshape(-1)[order])
+
+    xb, se, st, rank, sg = jax.shard_map(
+        dispatch,
+        in_specs=P(ba, None),
+        out_specs=(P(None, ba, None), P(ba), P(ba), P(ba), P(ba)),
+        axis_names=set(ba))(xt)
+
+    # expert GEMMs in GSPMD-land: E over "model", C over data (from dispatch)
+    xb = _wsc(xb, ("model", ba, None))
+    hb = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xb, p["wg"])) \
+        * jnp.einsum("ecd,edf->ecf", xb, p["wi"])
+    yb = jnp.einsum("ecf,efd->ecd", hb, p["wo"])
+    yb = _wsc(yb, ("model", ba, None))
+
+    def combine(yb_loc, se_l, st_l, rank_l, sg_l):
+        """Per-(data, model)-shard partial combine + psum over model."""
+        mrank = jax.lax.axis_index("model")
+        e_loc = se_l - mrank * E_per
+        mine = (e_loc >= 0) & (e_loc < E_per) & (rank_l < C_loc)
+        idx = jnp.clip(e_loc * C_loc + rank_l, 0, E_per * C_loc - 1)
+        contrib = yb_loc.reshape(E_per * C_loc, d)[idx] \
+            * (sg_l * mine)[:, None].astype(cfg.dtype)
+        y_part = jnp.zeros((T_loc, d), jnp.float32).at[st_l].add(
+            contrib.astype(jnp.float32))
+        return jax.lax.psum(y_part, "model").astype(cfg.dtype)
+
+    y = jax.shard_map(
+        combine,
+        in_specs=(P("model", ba, None), P(ba), P(ba), P(ba), P(ba)),
+        out_specs=P(ba, None),
+        axis_names=set(ba) | {"model"})(yb, se, st, rank, sg)
+
+    # aux loss omitted on this path (serving); shared expert still applies
+    if cfg.n_shared_experts:
+        y = y + apply_mlp(p["shared"], xt)
+    return y.reshape(B, S, d), jnp.float32(0.0)
+
+
+def apply_moe(p: Params, cfg: LMConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_loss).  x: [B, S, d].
+
+    Sorted capacity-bucket dispatch: tokens classified by expert (the
+    CBList sort-by-source trick), placed contiguously into per-expert
+    buckets, grouped-GEMM'd, and combined back by gate weight.
+    """
+    if cfg.ep_shard_map and cfg.act_shard_axes:
+        return apply_moe_ep(p, cfg, x)
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    # per-expert capacity (GShard semantics: overflow drops, residual passes
+    # through).  capacity_factor >= E/K makes dispatch dropless (C == T).
+    C = min(T, int(T * K / E * cfg.capacity_factor) + 1)
+
+    xt = x.reshape(T, d)
+    logits = (xt.astype(jnp.float32) @ p["router"])        # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)                   # [T, K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch): E * sum_e f_e * P_e
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sorted dispatch --------------------------------------------------
+    flat_e = eidx.reshape(-1)                              # [T*K]
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    flat_g = gate.reshape(-1)
+    order = jnp.argsort(flat_e)                            # classify by expert
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    # rank within expert
+    estart = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(jnp.bincount(se, length=E))[:-1]
+                              .astype(jnp.int32)])
+    rank = jnp.arange(T * K, dtype=jnp.int32) - estart[se]
+    keep = rank < C                                        # capacity drop
+    slot = jnp.where(keep, se * C + rank, E * C)           # E*C = dropped
+
+    if cfg.act_shard_axes:
+        # gather-based dispatch (§Perf iteration 2): scatter only the int32
+        # slot->token map (cheap), then build buckets with a GATHER whose
+        # output is pinned expert-sharded.  Avoids GSPMD's pathological
+        # dense-scatter lowering (full-bucket all-reduce per layer,
+        # hypothesis log in EXPERIMENTS.md).
+        tok_of_slot = jnp.full((E * C,), T, jnp.int32).at[slot].set(
+            st, mode="drop")
+        xbuf = jnp.where((tok_of_slot < T)[:, None],
+                         xt[jnp.minimum(tok_of_slot, T - 1)], 0.0
+                         ).astype(cfg.dtype)
+        xbuf = _wsc(xbuf, ("model", None))
+        xb = _wsc(xbuf.reshape(E, C, d), ("model", None, None))
+    else:
+        xbuf = jnp.zeros((E * C, d), cfg.dtype).at[slot].set(
+            xt[st].astype(cfg.dtype), mode="drop")
+        xb = xbuf.reshape(E, C, d)
+    hb = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xb, p["wg"])) \
+        * jnp.einsum("ecd,edf->ecf", xb, p["wi"])
+    if cfg.act_shard_axes:
+        hb = _wsc(hb, ("model", None, None))
+    yb = jnp.einsum("ecf,efd->ecd", hb, p["wo"]).reshape(E * C, d)
+
+    # combine: scatter-add gated expert outputs back to tokens
+    contrib = yb[jnp.minimum(slot, E * C - 1)] * sg[:, None].astype(cfg.dtype)
+    y = jnp.zeros((T, d), cfg.dtype).at[jnp.where(keep, st, T)].add(
+        contrib, mode="drop")
+
+    if cfg.n_shared_experts:
+        y = y + apply_mlp(p["shared"], xt)
+    return y.reshape(B, S, d), aux

@@ -1,0 +1,296 @@
+"""Decoder-only LM: init / loss / prefill / decode with period-scanned layers.
+
+Layers are scanned in *periods* (the cyclic local/global window pattern of
+Gemma-2/3): params are stacked [n_periods, ...] so the traced HLO contains
+one period regardless of depth — compile time and HLO size stay flat across
+46-62 layer configs, and every window is a static constant (Pallas-kernel
+compatible).  The tail (n_layers % period) is unrolled separately.
+
+Serve path uses a dense KV cache [L, B, KVH, S, D] whose S dim is
+sequence-sharded on the production mesh; softmax statistics merge across
+shards through GSPMD collectives (the LSE-merge decode pattern).  The paged
+Pallas path (blockstore chains + scalar-prefetched pages) is the on-device
+runtime equivalent — see kvcache.py / kernels/paged_attention.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.layers import (LMConfig, apply_attention,
+                                             apply_mlp, apply_moe, init_attention,
+                                             init_mlp, init_moe, init_rmsnorm,
+                                             qkv_proj, rmsnorm, rope)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: LMConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {"ln1": init_rmsnorm(cfg.d_model), "ln2": init_rmsnorm(cfg.d_model),
+         "attn": init_attention(ks[0], cfg)}
+    if cfg.moe:
+        p["moe"] = init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg)
+    return p
+
+
+def init_params(key, cfg: LMConfig) -> Params:
+    P = cfg.period
+    n_full, tail = divmod(cfg.n_layers, P)
+    keys = jax.random.split(key, 4)
+
+    def stack_layers(key, n):
+        lks = jax.random.split(key, max(n, 1))
+        layers = [_init_layer(k, cfg) for k in lks[:n]]
+        if not layers:
+            return None
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+    # periods: [n_full] stacked trees of P distinct sub-layer trees
+    period_layers = {}
+    for i in range(P):
+        period_layers[f"l{i}"] = stack_layers(jax.random.fold_in(keys[0], i),
+                                              n_full)
+    params = {
+        "embed": (jax.random.normal(keys[1], (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(cfg.dtype),
+        "lm_head": (jax.random.normal(keys[2], (cfg.d_model, cfg.vocab),
+                                      jnp.float32)
+                    * (cfg.d_model ** -0.5)).astype(cfg.dtype),
+        "ln_f": init_rmsnorm(cfg.d_model),
+        "periods": period_layers,
+    }
+    if tail:
+        tks = jax.random.split(keys[3], tail)
+        params["tail"] = [_init_layer(k, cfg) for k in tks]
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _apply_layer(p: Params, cfg: LMConfig, x, positions, window: int,
+                 impl: str):
+    h = apply_attention(p["attn"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps),
+                        positions, window, impl=impl)
+    x = x + h
+    z = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.moe:
+        y, aux = apply_moe(p["moe"], cfg, z)
+    else:
+        y, aux = apply_mlp(p["mlp"], z), jnp.float32(0.0)
+    return x + y, aux
+
+
+def forward(params: Params, cfg: LMConfig, tokens: jax.Array,
+            impl: str = "xla") -> Tuple[jax.Array, jax.Array]:
+    """tokens [B, S] -> (logits [B, S, vocab], aux_loss)."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = params["embed"][tokens] * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    windows = cfg.window_pattern
+
+    def period_body(carry, layer_p):
+        x, aux = carry
+        for i in range(cfg.period):
+            x, a = _apply_layer(jax.tree.map(lambda t: t, layer_p[f"l{i}"]),
+                                cfg, x, positions, windows[i], impl)
+            aux = aux + a
+        return (x, aux), None
+
+    aux = jnp.float32(0.0)
+    if params["periods"][f"l0"] is not None:
+        (x, aux), _ = jax.lax.scan(period_body, (x, aux), params["periods"])
+    for i, lp in enumerate(params.get("tail", [])):
+        x, a = _apply_layer(lp, cfg, x, positions, windows[i % cfg.period], impl)
+        aux = aux + a
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, aux
+
+
+def loss_fn(params: Params, cfg: LMConfig, tokens: jax.Array,
+            labels: jax.Array, impl: str = "xla") -> jax.Array:
+    logits, aux = forward(params, cfg, tokens, impl=impl)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = labels >= 0
+    nll = jnp.where(mask, logz - ll, 0.0).sum() / jnp.maximum(mask.sum(), 1)
+    return nll + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode over a dense (sequence-shardable) KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int,
+               dtype=None) -> Dict[str, jax.Array]:
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_seq, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "lengths": jnp.zeros((batch,), jnp.int32)}
+
+
+def _decode_attention_dense(cfg: LMConfig, q, k_cache, v_cache, lengths,
+                            window: int):
+    """q: [B, H, 1, D]; k/v_cache: [B, KVH, S, D]; LSE merge is implicit in
+    the fp32 softmax — with S sharded, GSPMD emits the cross-shard max/sum
+    collectives (distributed decode attention)."""
+    B, H, _, D = q.shape
+    KVH = k_cache.shape[1]
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, D)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * (cfg.head_dim ** -0.5)
+    if cfg.attn_softcap > 0:
+        s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+    ki = jnp.arange(k_cache.shape[2])
+    mask = ki[None, :] < (lengths + 1)[:, None]             # includes new token
+    if window > 0:
+        mask &= ki[None, :] > (lengths[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bhsd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, 1, D).astype(q.dtype)
+
+
+def _decode_layer(p: Params, cfg: LMConfig, x, k_cache, v_cache, lengths,
+                  window: int):
+    """x: [B, 1, d]; caches [B, KVH, S, D].  Returns (x', k_cache', v_cache')."""
+    B = x.shape[0]
+    z = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = qkv_proj(p["attn"], cfg, z)                   # [B, *, 1, D]
+    pos = lengths[:, None]                                  # [B, 1]
+    q = rope(q, pos[:, None, :], cfg.rope_theta)
+    k = rope(k, pos[:, None, :], cfg.rope_theta)
+    bidx = jnp.arange(B)[:, None]
+    hidx = jnp.arange(cfg.n_kv_heads)[None, :]
+    k_cache = k_cache.at[bidx, hidx, lengths[:, None], :].set(k[:, :, 0, :])
+    v_cache = v_cache.at[bidx, hidx, lengths[:, None], :].set(v[:, :, 0, :])
+    o = _decode_attention_dense(cfg, q, k_cache, v_cache, lengths, window)
+    o = o.transpose(0, 2, 1, 3).reshape(B, 1, -1) @ p["attn"]["wo"]
+    x = x + o
+    z = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.moe:
+        y, _ = apply_moe(p["moe"], cfg, z)
+    else:
+        y = apply_mlp(p["mlp"], z)
+    return x + y, k_cache, v_cache
+
+
+def serve_step(params: Params, cfg: LMConfig, cache: Dict[str, jax.Array],
+               tokens: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step: tokens [B, 1] -> (logits [B, vocab], cache')."""
+    B = tokens.shape[0]
+    lengths = cache["lengths"]
+    x = params["embed"][tokens] * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    windows = cfg.window_pattern
+    P = cfg.period
+    n_full = cfg.n_layers // P
+
+    k_all, v_all = cache["k"], cache["v"]
+
+    def period_body(x, inputs):
+        layer_p, kc, vc = inputs                           # kc: [P, B, KVH, S, D]
+        new_k, new_v = [], []
+        for i in range(P):
+            x, k_i, v_i = _decode_layer(
+                layer_p[f"l{i}"], cfg, x, kc[i], vc[i], lengths, windows[i])
+            new_k.append(k_i)
+            new_v.append(v_i)
+        return x, (jnp.stack(new_k), jnp.stack(new_v))
+
+    if n_full:
+        kp = k_all[:n_full * P].reshape((n_full, P) + k_all.shape[1:])
+        vp = v_all[:n_full * P].reshape((n_full, P) + v_all.shape[1:])
+        x, (kp, vp) = jax.lax.scan(period_body, x,
+                                   (params["periods"], kp, vp))
+        k_all = k_all.at[:n_full * P].set(kp.reshape((-1,) + k_all.shape[1:]))
+        v_all = v_all.at[:n_full * P].set(vp.reshape((-1,) + v_all.shape[1:]))
+    for i, lp in enumerate(params.get("tail", [])):
+        li = n_full * P + i
+        x, k_i, v_i = _decode_layer(lp, cfg, x, k_all[li], v_all[li], lengths,
+                                    windows[i % P])
+        k_all = k_all.at[li].set(k_i)
+        v_all = v_all.at[li].set(v_i)
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = (x[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, {"k": k_all, "v": v_all, "lengths": lengths + 1}
+
+
+def prefill(params: Params, cfg: LMConfig, tokens: jax.Array,
+            impl: str = "xla") -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Prefill: run the full prompt, build the KV cache, return last logits.
+
+    The cache is produced by re-running qkv projections per layer inside a
+    scan (cheap relative to attention) — avoids threading activations out.
+    """
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = params["embed"][tokens] * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    windows = cfg.window_pattern
+    P = cfg.period
+
+    def layer_with_cache(p, x, window):
+        z = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        q, k, v = qkv_proj(p["attn"], cfg, z)
+        q = rope(q, positions[:, None, :], cfg.rope_theta)
+        k_r = rope(k, positions[:, None, :], cfg.rope_theta)
+        from repro.kernels.flash_attention import attention as flash
+        o = flash(q, k_r, v, scale=cfg.head_dim ** -0.5, causal=True,
+                  window=window, softcap=cfg.attn_softcap, impl="xla")
+        o = o.transpose(0, 2, 1, 3).reshape(B, S, -1) @ p["attn"]["wo"]
+        x = x + o
+        z2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if cfg.moe:
+            y, _ = apply_moe(p["moe"], cfg, z2)
+        else:
+            y = apply_mlp(p["mlp"], z2)
+        return x + y, k_r, v
+
+    def period_body(x, layer_p):
+        ks, vs = [], []
+        for i in range(P):
+            x, k, v = layer_with_cache(layer_p[f"l{i}"], x, windows[i])
+            ks.append(k)
+            vs.append(v)
+        return x, (jnp.stack(ks), jnp.stack(vs))
+
+    n_full = cfg.n_layers // P
+    caches_k, caches_v = [], []
+    if n_full:
+        x, (kp, vp) = jax.lax.scan(period_body, x, params["periods"])
+        caches_k.append(kp.reshape((-1,) + kp.shape[2:]))
+        caches_v.append(vp.reshape((-1,) + vp.shape[2:]))
+    for i, lp in enumerate(params.get("tail", [])):
+        x, k, v = layer_with_cache(lp, x, windows[i % P])
+        caches_k.append(k[None])
+        caches_v.append(v[None])
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = (x[:, -1, :] @ params["lm_head"]).astype(jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    cache = {"k": jnp.concatenate(caches_k), "v": jnp.concatenate(caches_v),
+             "lengths": jnp.full((B,), S, jnp.int32)}
+    return logits, cache

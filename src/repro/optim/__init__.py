@@ -1,0 +1,5 @@
+from repro.optim.adamw import (AdamWConfig, adamw_update, clip_by_global_norm,
+                               global_norm, init_opt_state)
+from repro.optim.compress import (ErrorFeedback, int8_compress, int8_decompress,
+                                  topk_compress, topk_decompress)
+from repro.optim.schedules import warmup_cosine

@@ -1,0 +1,4 @@
+from repro.runtime.fault_tolerance import (FailureInjector, StragglerPolicy,
+                                           SupervisorReport, TrainSupervisor)
+from repro.runtime.elastic import (ElasticPlan, make_mesh_from_plan,
+                                   plan_elastic_restart, reshard_state)

@@ -1,0 +1,55 @@
+"""Elastic scaling: re-shard a checkpointed training state onto a new mesh.
+
+Scenario: the job starts on 2 pods (512 chips); a pod is lost -> resume on
+256; capacity returns -> grow back.  Checkpoints store logical arrays, so
+elasticity is a restore with the *new* mesh's shardings plus a data-pipeline
+re-split.  ``plan_elastic_restart`` computes the new mesh shape and the
+batch re-split; ``reshard_state`` re-places every leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    per_host_batch: int
+
+
+def plan_elastic_restart(n_devices: int, global_batch: int,
+                         model_parallel: int = 16) -> ElasticPlan:
+    """Choose (data, model) given the surviving device count.
+
+    Keeps model-parallel fixed (weights layouts stay valid) and shrinks the
+    data axis; global batch is preserved by raising per-shard batch.
+    """
+    if n_devices % model_parallel:
+        raise ValueError(f"{n_devices} devices not divisible by "
+                         f"model_parallel={model_parallel}")
+    data = n_devices // model_parallel
+    if global_batch % data:
+        # shrink data axis until it divides the batch (keeps semantics exact)
+        while data > 1 and global_batch % data:
+            data -= 1
+    return ElasticPlan((data, model_parallel), ("data", "model"),
+                       global_batch // data)
+
+
+def make_mesh_from_plan(plan: ElasticPlan) -> Mesh:
+    n = int(np.prod(plan.mesh_shape))
+    devs = np.asarray(jax.devices()[:n]).reshape(plan.mesh_shape)
+    return Mesh(devs, plan.axis_names)
+
+
+def reshard_state(state: Any, shardings: Any) -> Any:
+    """device_put every leaf to the new topology (logical values unchanged)."""
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, s) if s is not None else a,
+        state, shardings)

@@ -1,0 +1,89 @@
+"""Graph analytics vs networkx oracles."""
+import jax
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.core import build_from_coo
+from repro.graph import (bfs, connected_components, incremental_pagerank,
+                         label_propagation, pagerank, sample_subgraph, sssp,
+                         triangle_count)
+
+
+@pytest.fixture(scope="module")
+def nx_graph():
+    rng = np.random.default_rng(2)
+    NV = 60
+    G = nx.gnp_random_graph(NV, 0.08, seed=3, directed=True)
+    for u, v in G.edges():
+        G[u][v]["weight"] = float(rng.random() + 0.1)
+    src = np.array([e[0] for e in G.edges()], np.int32)
+    dst = np.array([e[1] for e in G.edges()], np.int32)
+    w = np.array([G[u][v]["weight"] for u, v in G.edges()], np.float32)
+    cbl = build_from_coo(jnp.array(src), jnp.array(dst), jnp.array(w),
+                         num_vertices=NV, num_blocks=256, block_width=8)
+    return NV, G, cbl
+
+
+def test_pagerank(nx_graph):
+    NV, G, cbl = nx_graph
+    pr = np.array(pagerank(cbl, 0.85, 100, tol=1e-10))
+    prx = nx.pagerank(G, alpha=0.85, max_iter=200, tol=1e-12, weight=None)
+    np.testing.assert_allclose(pr, [prx[i] for i in range(NV)], atol=2e-4)
+
+
+def test_bfs(nx_graph):
+    NV, G, cbl = nx_graph
+    b = np.array(bfs(cbl, jnp.int32(0)))
+    lens = nx.single_source_shortest_path_length(G, 0)
+    assert np.array_equal(b, [lens.get(i, -1) for i in range(NV)])
+
+
+def test_sssp(nx_graph):
+    NV, G, cbl = nx_graph
+    d = np.array(sssp(cbl, jnp.int32(0)))
+    dl = nx.single_source_dijkstra_path_length(G, 0, weight="weight")
+    dref = np.array([dl.get(i, np.inf) for i in range(NV)], np.float32)
+    fin = np.isfinite(dref)
+    np.testing.assert_allclose(d[fin], dref[fin], atol=1e-4)
+    assert np.all(np.isinf(d[~fin]))
+
+
+def test_cc(nx_graph):
+    NV, G, cbl = nx_graph
+    cc = np.array(connected_components(cbl))
+    for comp in nx.weakly_connected_components(G):
+        assert len(set(cc[list(comp)].tolist())) == 1
+
+
+def test_lp_runs(nx_graph):
+    NV, G, cbl = nx_graph
+    lp = label_propagation(cbl, jnp.zeros(NV, jnp.int32).at[0].set(1),
+                           jnp.arange(NV) < 5, num_classes=4, max_iters=5)
+    assert lp.shape == (NV,)
+
+
+def test_triangle_probe(nx_graph):
+    NV, G, cbl = nx_graph
+    tc = int(triangle_count(cbl, 1024))
+    assert tc == sum(1 for u, v in G.edges() if G.has_edge(v, u))
+
+
+def test_sampler_edges_exist(nx_graph):
+    NV, G, cbl = nx_graph
+    sg = sample_subgraph(cbl, jnp.arange(8, dtype=jnp.int32),
+                         jax.random.PRNGKey(0), fanout=(5, 3))
+    s, t, ok = np.array(sg.src), np.array(sg.dst), np.array(sg.valid)
+    assert ok.sum() > 0
+    for i in range(len(s)):
+        if ok[i]:
+            assert G.has_edge(int(s[i]), int(t[i]))
+
+
+def test_incremental_pagerank_converges_faster(nx_graph):
+    NV, G, cbl = nx_graph
+    pr0 = pagerank(cbl, 0.85, 100, tol=1e-12)
+    # warm start should already be converged -> equal result
+    pr1 = incremental_pagerank(cbl, pr0, max_iters=5, tol=1e-12)
+    np.testing.assert_allclose(np.array(pr0), np.array(pr1), atol=1e-6)

@@ -1,0 +1,122 @@
+"""CBList core vs dict oracle: build, query, push/pull, batch update,
+vertex deletion, rebuild/compact."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DELETE, INSERT, batch_update, build_from_coo, compact,
+                        delete_vertices, gtchain_contiguity, out_degrees,
+                        process_edge_pull, process_edge_push, read_edges,
+                        rebuild, to_coo)
+
+
+def build(small_graph, block_width=8):
+    NV, src, dst, w, adj = small_graph
+    cbl = build_from_coo(jnp.array(src), jnp.array(dst), jnp.array(w),
+                         num_vertices=NV, num_blocks=256,
+                         block_width=block_width)
+    return NV, cbl, dict(adj)
+
+
+def oracle_deg(adj, NV):
+    deg = np.zeros(NV, np.int32)
+    for (s, _) in adj:
+        deg[s] += 1
+    return deg
+
+
+def test_build_degrees_and_contiguity(small_graph):
+    NV, cbl, adj = build(small_graph)
+    assert np.array_equal(np.array(out_degrees(cbl)), oracle_deg(adj, NV))
+    assert float(gtchain_contiguity(cbl.store)) == 1.0
+
+
+@pytest.mark.parametrize("block_width", [4, 8, 32])
+def test_read_edges(small_graph, block_width):
+    NV, cbl, adj = build(small_graph, block_width)
+    items = list(adj.items())[:64]
+    qs = np.array([k[0] for k, _ in items] + [0, 1], np.int32)
+    qd = np.array([k[1] for k, _ in items] + [NV - 1, NV - 2], np.int32)
+    found, wq = read_edges(cbl, jnp.array(qs), jnp.array(qd))
+    for i in range(len(qs)):
+        exp = (int(qs[i]), int(qd[i])) in adj
+        assert bool(found[i]) == exp
+        if exp:
+            assert abs(float(wq[i]) - adj[(int(qs[i]), int(qd[i]))]) < 1e-6
+
+
+def test_push_pull(small_graph):
+    NV, cbl, adj = build(small_graph)
+    x = np.random.default_rng(1).random(NV).astype(np.float32)
+    y = np.array(process_edge_push(cbl, jnp.array(x)))
+    yref = np.zeros(NV, np.float32)
+    for (s, d), ww in adj.items():
+        yref[d] += x[s] * ww
+    np.testing.assert_allclose(y, yref, atol=1e-4)
+    yp = np.array(process_edge_pull(cbl, jnp.array(x)))
+    ypref = np.zeros(NV, np.float32)
+    for (s, d), ww in adj.items():
+        ypref[s] += x[d] * ww
+    np.testing.assert_allclose(yp, ypref, atol=1e-4)
+
+
+def test_batch_update_roundtrip(small_graph):
+    NV, cbl, adj = build(small_graph)
+    new = [(s, d) for s in range(NV) for d in range(NV)
+           if (s, d) not in adj][:40]
+    dels = list(adj)[:30]
+    us = np.array([p[0] for p in new] + [p[0] for p in dels], np.int32)
+    ud = np.array([p[1] for p in new] + [p[1] for p in dels], np.int32)
+    op = np.array([INSERT] * len(new) + [DELETE] * len(dels), np.int32)
+    cbl2 = batch_update(cbl, jnp.array(us), jnp.array(ud),
+                        jnp.ones(len(us), jnp.float32), jnp.array(op))
+    for p in new:
+        adj[p] = 1.0
+    for p in dels:
+        del adj[p]
+    assert np.array_equal(np.array(out_degrees(cbl2)), oracle_deg(adj, NV))
+    s3, d3, _, v3 = to_coo(cbl2, 2048)
+    got = set((int(a), int(b)) for a, b, vv in
+              zip(np.array(s3), np.array(d3), np.array(v3)) if vv)
+    assert got == set(adj)
+    # deleted edges are gone; inserted are found
+    f, _ = read_edges(cbl2, jnp.array([p[0] for p in dels], np.int32),
+                      jnp.array([p[1] for p in dels], np.int32))
+    assert not bool(jnp.any(f))
+    f2, _ = read_edges(cbl2, jnp.array([p[0] for p in new], np.int32),
+                       jnp.array([p[1] for p in new], np.int32))
+    assert bool(jnp.all(f2))
+
+
+def test_delete_vertices(small_graph):
+    NV, cbl, adj = build(small_graph)
+    cbl2 = delete_vertices(cbl, jnp.array([0, 1, 2], np.int32))
+    adj2 = {k: v for k, v in adj.items()
+            if k[0] not in (0, 1, 2) and k[1] not in (0, 1, 2)}
+    s3, d3, _, v3 = to_coo(cbl2, 2048)
+    got = set((int(a), int(b)) for a, b, vv in
+              zip(np.array(s3), np.array(d3), np.array(v3)) if vv)
+    assert got == set(adj2)
+    assert np.array_equal(np.array(out_degrees(cbl2)), oracle_deg(adj2, NV))
+
+
+def test_rebuild_and_compact_preserve_graph(small_graph):
+    NV, cbl, adj = build(small_graph)
+    new = [(s, d) for s in range(NV) for d in range(NV)
+           if (s, d) not in adj][:60]
+    cbl = batch_update(cbl, jnp.array([p[0] for p in new], np.int32),
+                       jnp.array([p[1] for p in new], np.int32))
+    for p in new:
+        adj[p] = 1.0
+    assert float(gtchain_contiguity(cbl.store)) < 1.0
+    cbl_r = rebuild(cbl, 2048)
+    assert float(gtchain_contiguity(cbl_r.store)) == 1.0
+    s3, d3, _, v3 = to_coo(cbl_r, 2048)
+    got = set((int(a), int(b)) for a, b, vv in
+              zip(np.array(s3), np.array(d3), np.array(v3)) if vv)
+    assert got == set(adj)
+    cbl_c = cbl._replace(store=compact(cbl.store))
+    s4, d4, _, v4 = to_coo(cbl_c, 2048)
+    got4 = set((int(a), int(b)) for a, b, vv in
+               zip(np.array(s4), np.array(d4), np.array(v4)) if vv)
+    assert got4 == set(adj)

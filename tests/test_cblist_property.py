@@ -1,0 +1,130 @@
+"""Hypothesis property tests: CBList under random update sequences stays
+equivalent to a dict-of-sets oracle and preserves its structural invariants.
+
+Invariants checked after every batch:
+  I1  out_degrees == oracle degrees
+  I2  to_coo edge set == oracle edge set
+  I3  every oracle edge is found by read_edges; absent edges are not
+  I4  allocator accounting: live blocks + free blocks == capacity
+  I5  per-block fill counts equal the number of non-PAD key lanes
+  I6  chain walk from v_head visits exactly v_level blocks
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DELETE, INSERT, NULL, PAD, batch_update,
+                        build_from_coo, out_degrees, read_edges, to_coo)
+
+NV = 12
+CAP_BLOCKS = 128
+BW = 4
+
+
+def apply_oracle(adj, ops):
+    """Phase semantics (documented in updates.batch_update): all deletes
+    first, then all inserts."""
+    for s, d, op in ops:
+        if op == DELETE:
+            adj.pop((s, d), None)
+    for s, d, op in ops:
+        if op == INSERT:
+            adj[(s, d)] = 1.0
+    return adj
+
+
+@st.composite
+def update_batches(draw):
+    n_batches = draw(st.integers(1, 4))
+    batches = []
+    for _ in range(n_batches):
+        n = draw(st.integers(1, 12))
+        batch = []
+        for _ in range(n):
+            s = draw(st.integers(0, NV - 1))
+            d = draw(st.integers(0, NV - 1))
+            op = draw(st.sampled_from([INSERT, DELETE]))
+            batch.append((s, d, op))
+        batches.append(batch)
+    return batches
+
+
+@settings(max_examples=25, deadline=None)
+@given(update_batches(), st.integers(0, 2 ** 31 - 1))
+def test_cblist_matches_oracle(batches, seed):
+    rng = np.random.default_rng(seed)
+    n0 = rng.integers(0, 30)
+    s0 = rng.integers(0, NV, n0)
+    d0 = rng.integers(0, NV, n0)
+    init = sorted(set(zip(s0.tolist(), d0.tolist())))
+    adj = {p: 1.0 for p in init}
+    cbl = build_from_coo(
+        jnp.array([p[0] for p in init], jnp.int32).reshape(-1),
+        jnp.array([p[1] for p in init], jnp.int32).reshape(-1),
+        None, num_vertices=NV, num_blocks=CAP_BLOCKS, block_width=BW)
+
+    for batch in batches:
+        # drop inserts that would create parallel edges (simple-graph
+        # semantics): an edge may be inserted if it is absent OR deleted in
+        # the same batch's delete phase
+        dels = {(s, d) for s, d, op in batch if op == DELETE}
+        seen_ins = set()
+        clean = []
+        for s, d, op in batch:
+            if op == INSERT:
+                if (s, d) in seen_ins or ((s, d) in adj and (s, d) not in dels):
+                    continue
+                seen_ins.add((s, d))
+            clean.append((s, d, op))
+        if not clean:
+            continue
+        src = jnp.array([c[0] for c in clean], jnp.int32)
+        dst = jnp.array([c[1] for c in clean], jnp.int32)
+        op = jnp.array([c[2] for c in clean], jnp.int32)
+        cbl = batch_update(cbl, src, dst, None, op)
+        adj = apply_oracle(adj, clean)
+
+        # I1 degrees
+        deg = np.zeros(NV, np.int32)
+        for (s, _) in adj:
+            deg[s] += 1
+        assert np.array_equal(np.array(out_degrees(cbl)), deg)
+
+        # I2 edge set
+        s3, d3, _, v3 = to_coo(cbl, CAP_BLOCKS * BW)
+        got = set((int(a), int(b)) for a, b, vv in
+                  zip(np.array(s3), np.array(d3), np.array(v3)) if vv)
+        assert got == set(adj)
+
+        # I3 queries
+        if adj:
+            qs = jnp.array([p[0] for p in adj], jnp.int32)
+            qd = jnp.array([p[1] for p in adj], jnp.int32)
+            f, _ = read_edges(cbl, qs, qd)
+            assert bool(jnp.all(f))
+        absent = [(s, d) for s in range(NV) for d in range(NV)
+                  if (s, d) not in adj][:20]
+        if absent:
+            f, _ = read_edges(cbl,
+                              jnp.array([p[0] for p in absent], jnp.int32),
+                              jnp.array([p[1] for p in absent], jnp.int32))
+            assert not bool(jnp.any(f))
+
+        # I4 allocator accounting
+        live = int((cbl.store.owner != NULL).sum())
+        assert live + int(cbl.store.free_top) == CAP_BLOCKS
+
+        # I5 per-block counts
+        key_live = (np.array(cbl.store.keys) != PAD).sum(axis=1)
+        assert np.array_equal(key_live, np.array(cbl.store.count))
+
+        # I6 chain lengths == v_level
+        nxt = np.array(cbl.store.nxt)
+        head = np.array(cbl.v_head)
+        lvl = np.array(cbl.v_level)
+        for v in range(NV):
+            n, cur = 0, head[v]
+            while cur != NULL and n <= CAP_BLOCKS:
+                n += 1
+                cur = nxt[cur]
+            assert n == lvl[v], (v, n, lvl[v])

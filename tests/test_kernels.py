@@ -1,0 +1,107 @@
+"""Per-kernel shape/dtype sweeps: Pallas interpret mode vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (attention, attention_ref, block_gather_ref,
+                           decode_attention, embedding_bag, embedding_bag_ref,
+                           gather_rows, paged_attention_ref, segment_matmul,
+                           segment_sum_ref)
+
+rng = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("E,NR,F", [(200, 37, 16), (1000, 100, 64),
+                                    (64, 8, 8), (500, 3, 128), (96, 96, 32)])
+def test_segment_matmul(E, NR, F):
+    seg = rng.integers(0, NR, E).astype(np.int32)
+    seg[rng.random(E) < 0.1] = -1
+    data = rng.random((E, F), np.float32)
+    ref = segment_sum_ref(jnp.array(data), jnp.array(seg), NR)
+    out = segment_matmul(jnp.array(data), jnp.array(seg), NR,
+                         impl="pallas_interpret")
+    np.testing.assert_allclose(out, ref, atol=1e-4)
+
+
+@pytest.mark.parametrize("tile,rpb", [(64, 8), (128, 16), (32, 4)])
+def test_segment_matmul_tilings(tile, rpb):
+    E, NR, F = 300, 64, 32
+    seg = np.sort(rng.integers(0, NR, E)).astype(np.int32)
+    data = rng.random((E, F), np.float32)
+    ref = segment_sum_ref(jnp.array(data), jnp.array(seg), NR)
+    out = segment_matmul(jnp.array(data), jnp.array(seg), NR, tile=tile,
+                         rows_per_block=rpb, impl="pallas_interpret")
+    np.testing.assert_allclose(out, ref, atol=1e-4)
+
+
+@pytest.mark.parametrize("R,F,N,G", [(64, 16, 10, 8), (128, 32, 5, 16),
+                                     (32, 8, 32, 4)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_block_gather(R, F, N, G, dtype):
+    table = jnp.asarray(rng.random((R, F), np.float32)).astype(dtype)
+    ids = jnp.array(rng.integers(0, R // G, N).astype(np.int32))
+    out = gather_rows(table, ids, rows_per_step=G, impl="pallas_interpret")
+    ref = block_gather_ref(table, ids, G)
+    assert jnp.array_equal(out, ref)
+
+
+@pytest.mark.parametrize("V,F,B,L", [(100, 16, 8, 5), (50, 32, 16, 3),
+                                     (200, 64, 4, 10)])
+def test_embedding_bag(V, F, B, L):
+    table = jnp.array(rng.random((V, F), np.float32))
+    ids = jnp.array(rng.integers(-1, V, (B, L)).astype(np.int32))
+    w = jnp.array(rng.random((B, L), np.float32))
+    out = embedding_bag(table, ids, w, impl="pallas_interpret")
+    ref = embedding_bag_ref(table, ids, w)
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,H,KVH,S,D,causal,window,cap", [
+    (1, 2, 2, 64, 16, True, 0, 0.0),
+    (2, 4, 2, 128, 32, True, 0, 50.0),
+    (1, 2, 1, 64, 16, True, 32, 0.0),
+    (1, 2, 2, 64, 16, False, 0, 0.0),
+])
+def test_flash_attention(B, H, KVH, S, D, causal, window, cap):
+    q = jnp.array(rng.standard_normal((B, H, S, D)).astype(np.float32))
+    k = jnp.array(rng.standard_normal((B, KVH, S, D)).astype(np.float32))
+    v = jnp.array(rng.standard_normal((B, KVH, S, D)).astype(np.float32))
+    sc = 1 / np.sqrt(D)
+    out = attention(q, k, v, scale=sc, causal=causal, window=window,
+                    softcap=cap, tq=32, tk=32, impl="pallas_interpret")
+    ref = attention_ref(q, k, v, scale=sc, causal=causal, window=window,
+                        softcap=cap)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    B, H, S, D = 1, 2, 64, 16
+    q = jnp.array(rng.standard_normal((B, H, S, D)), jnp.bfloat16)
+    k = jnp.array(rng.standard_normal((B, H, S, D)), jnp.bfloat16)
+    v = jnp.array(rng.standard_normal((B, H, S, D)), jnp.bfloat16)
+    out = attention(q, k, v, scale=D ** -0.5, tq=32, tk=32,
+                    impl="pallas_interpret")
+    ref = attention_ref(q, k, v, scale=D ** -0.5)
+    np.testing.assert_allclose(np.array(out, np.float32),
+                               np.array(ref, np.float32), atol=3e-2)
+
+
+@pytest.mark.parametrize("B,KVH,G,D,page,NP,window,cap", [
+    (2, 2, 4, 16, 8, 6, 0, 0.0),
+    (3, 1, 8, 32, 16, 4, 0, 50.0),
+    (2, 2, 2, 16, 8, 6, 24, 0.0),
+])
+def test_paged_attention(B, KVH, G, D, page, NP, window, cap):
+    P = 32
+    q = jnp.array(rng.standard_normal((B, KVH, G, D)).astype(np.float32))
+    kp = jnp.array(rng.standard_normal((KVH, P, page, D)).astype(np.float32))
+    vp = jnp.array(rng.standard_normal((KVH, P, page, D)).astype(np.float32))
+    bt = jnp.array(rng.permutation(P)[:B * NP].reshape(B, NP).astype(np.int32))
+    lens = jnp.array(rng.integers(1, NP * page, B).astype(np.int32))
+    sc = 1 / np.sqrt(D)
+    out = decode_attention(q, kp, vp, bt, lens, scale=sc, window=window,
+                           softcap=cap, impl="pallas_interpret")
+    ref = paged_attention_ref(q, kp, vp, bt, lens, scale=sc, window=window,
+                              softcap=cap)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
