@@ -17,8 +17,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import build_cbl, dataset, emit, time_fn
-from repro.core import batch_update, gtchain_contiguity, process_edge_push
+from repro.core import (batch_update, gtchain_contiguity, process_edge_pull,
+                        process_edge_push, process_edge_push_feat)
 from repro.core import blockstore as bs
+from repro.core.tuner import choose_engine_impl
 
 
 def shuffle_blocks(cbl, seed=0):
@@ -55,6 +57,31 @@ def run():
     emit("interleave/sweep_shuffled", t_shuf,
          f"contig={float(gtchain_contiguity(cbl_sh.store)):.2f},"
          f"slowdown={t_shuf / t_ord:.2f}x")
+
+    # --- engine impl: XLA oracle vs Pallas coroutine-prefetch path ---------
+    # On TPU the pallas path is the compiled scalar-prefetch pipeline; on
+    # CPU it transparently runs in interpret mode (compat layer), so the
+    # numbers are only meaningful on TPU — parity is asserted either way.
+    xf = jnp.asarray(np.random.default_rng(3)
+                     .random((nv, 32)).astype(np.float32))
+    sweeps = {
+        "push": lambda impl: process_edge_push(cbl, x, impl=impl),
+        "pull": lambda impl: process_edge_pull(cbl, x, impl=impl),
+        "push_feat": lambda impl: process_edge_push_feat(cbl, xf, impl=impl),
+    }
+    impl_ratios = {}
+    for name, sweep in sweeps.items():
+        np.testing.assert_allclose(np.array(sweep("pallas")),
+                                   np.array(sweep("xla")), atol=1e-3)
+        t_xla = time_fn(lambda: sweep("xla"))
+        t_pal = time_fn(lambda: sweep("pallas"), iters=3, warmup=1)
+        impl_ratios[name] = t_pal / t_xla
+        emit(f"interleave/{name}_xla", t_xla)
+        emit(f"interleave/{name}_pallas", t_pal,
+             f"ratio={t_pal / t_xla:.2f}x,"
+             f"backend={jax.default_backend()}")
+    emit("interleave/tuner_impl", 0.0,
+         f"choice={choose_engine_impl(cbl, 'scan_all')}")
 
     # --- sorted vs unsorted segment reduction ------------------------------
     E = len(src)
@@ -94,7 +121,8 @@ def run():
          f"speedup={per_edge_seq / per_edge_batch:.1f}x")
     return {"layout_slowdown": t_shuf / t_ord,
             "segsort_slowdown": t_r / t_s,
-            "batch_speedup": per_edge_seq / per_edge_batch}
+            "batch_speedup": per_edge_seq / per_edge_batch,
+            "pallas_vs_xla": impl_ratios}
 
 
 if __name__ == "__main__":

@@ -7,9 +7,11 @@ from repro.core.cblist import (CBList, block_fences, build_from_coo, degrees,
 from repro.core.updates import (DELETE, INSERT, NOP, add_vertices, batch_update,
                                 delete_vertices, read_edges, upsert_edges)
 from repro.core.engine import (in_degrees, out_degrees, process_edge_pull,
-                               process_edge_push, process_vertex)
+                               process_edge_push, process_edge_push_feat,
+                               process_vertex)
 from repro.core.traversal import (Partition, gtchain_partition, lane_mask,
                                   partition_balance, scan_edges, scan_vertices,
                                   scan_vertices_cond, vertex_table_partition,
                                   read_vertex)
-from repro.core.tuner import ExecPlan, SystemProbe, choose_plan
+from repro.core.tuner import (ExecPlan, SystemProbe, choose_engine_impl,
+                              choose_plan)

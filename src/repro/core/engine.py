@@ -16,6 +16,20 @@ Semantics of one ProcessEdge sweep (push mode):
 Pull mode gathers x[v_dst] per lane instead (random access — the case where
 the paper's software prefetching shines; on TPU the gather is one XLA
 ``take`` over the contiguous value vector).
+
+Every sweep takes ``impl=``:
+
+  * ``"xla"``            — the portable segment-op oracle (All-Hard),
+  * ``"pallas"``         — the co-designed path: the data-dependent gathers
+    run through the scalar-prefetched ``block_gather`` kernel and the
+    destination scatter through the GTChain ``segment_matmul`` kernel
+    (the paper's coroutine-interleave mode; interpret-mode fallback
+    off-TPU via :mod:`repro.compat`),
+  * ``"pallas_interpret"`` — kernel bodies interpreted everywhere (CI).
+
+``min``/``max`` combines always use the oracle (the MXU accumulation
+kernel is additive); the tuner never routes frontier tasks to Pallas.
+Pick ``impl`` per graph/backend with :func:`repro.core.tuner.choose_plan`.
 """
 from __future__ import annotations
 
@@ -29,11 +43,50 @@ from repro.core.blockstore import NULL, PAD
 from repro.core.cblist import CBList
 from repro.core.traversal import lane_mask
 
+try:
+    from repro.kernels import gather_rows, segment_matmul
+except Exception:   # Pallas-less JAX build: the XLA oracle stays importable
+    gather_rows = segment_matmul = None
+
 COMBINERS = {
     "sum": jax.ops.segment_sum,
     "min": jax.ops.segment_min,
     "max": jax.ops.segment_max,
 }
+
+
+def _gather_values(x: jax.Array, ids: jax.Array, impl: str) -> jax.Array:
+    """x[ids] through the scalar-prefetched block_gather when impl != xla.
+
+    ``ids`` must already be clipped into [0, len(x)); the result keeps the
+    shape of ``ids`` (+ feature axis when x is 2-D).
+    """
+    if impl == "xla":
+        return x[ids]
+    if gather_rows is None:
+        raise NotImplementedError(
+            f"impl={impl!r} needs Pallas, which this JAX build lacks "
+            "(repro.compat.HAS_PALLAS is False); use impl='xla'")
+    flat = ids.reshape(-1)
+    if x.ndim == 1:
+        out = gather_rows(x[:, None], flat, rows_per_step=1, impl=impl)[:, 0]
+        return out.reshape(ids.shape)
+    out = gather_rows(x, flat, rows_per_step=1, impl=impl)
+    return out.reshape(ids.shape + (x.shape[1],))
+
+
+def _segment_sum(msg: jax.Array, seg: jax.Array, num_segments: int,
+                 impl: str) -> jax.Array:
+    """Flat segment-sum via the GTChain segment_matmul kernel or the oracle."""
+    if impl == "xla":
+        return jax.ops.segment_sum(msg, seg, num_segments=num_segments)
+    if segment_matmul is None:
+        raise NotImplementedError(
+            f"impl={impl!r} needs Pallas, which this JAX build lacks "
+            "(repro.compat.HAS_PALLAS is False); use impl='xla'")
+    data = msg[:, None] if msg.ndim == 1 else msg
+    out = segment_matmul(data, seg, num_segments, impl=impl)
+    return out[:, 0] if msg.ndim == 1 else out
 
 
 def process_vertex(cbl: CBList, f: Callable, x: jax.Array,
@@ -61,7 +114,8 @@ def process_edge_push(cbl: CBList, x: jax.Array,
     st = cbl.store
     nv = cbl.capacity_vertices
     owner_safe = jnp.maximum(st.owner, 0)
-    xs = x[owner_safe]                                   # [NB] per-block src value
+    gather_impl = impl if combine == "sum" else "xla"
+    xs = _gather_values(x, owner_safe, gather_impl)      # [NB] per-block src value
     mask = lane_mask(st)
     if active is not None:
         mask = mask & active[owner_safe][:, None]
@@ -69,28 +123,32 @@ def process_edge_push(cbl: CBList, x: jax.Array,
     seg = jnp.where(mask, st.keys, nv)                   # PAD/out-of-range drop
     if combine == "sum":
         msg = jnp.where(mask, msg, 0.0)
-        return jax.ops.segment_sum(msg.ravel(), seg.ravel(), num_segments=nv)
+        return _segment_sum(msg.ravel(), seg.ravel(), nv, impl)
     fill = jnp.inf if combine == "min" else -jnp.inf
     msg = jnp.where(mask, msg, fill)
     out = COMBINERS[combine](msg.ravel(), seg.ravel(), num_segments=nv)
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("dense_f", "combine"))
+@functools.partial(jax.jit, static_argnames=("dense_f", "combine", "impl"))
 def process_edge_pull(cbl: CBList, x: jax.Array,
                       active_dst: Optional[jax.Array] = None,
                       *, dense_f: Callable = lambda xd, w: xd * w,
-                      combine: str = "sum") -> jax.Array:
+                      combine: str = "sum",
+                      impl: str = "xla") -> jax.Array:
     """Pull sweep: y[src] = combine over out-edges of dense_f(x[dst], w).
 
     The x[dst] gather is the random-access pattern of the paper (§2.1); on
-    the blocked layout it is a single vectorized take over lanes.
+    the blocked layout it is a single vectorized take over lanes — or, with
+    ``impl="pallas"``, a scalar-prefetched ``block_gather`` whose
+    destination ids stream ahead of the DMA pipeline.
     """
     st = cbl.store
     nv = cbl.capacity_vertices
     mask = lane_mask(st)
     dst_safe = jnp.clip(st.keys, 0, nv - 1)
-    xd = x[dst_safe]                                     # [NB, B] random gather
+    gather_impl = impl if combine == "sum" else "xla"
+    xd = _gather_values(x, dst_safe, gather_impl)        # [NB, B] random gather
     if active_dst is not None:
         mask = mask & active_dst[dst_safe]
     msg = dense_f(xd, st.vals)
@@ -98,35 +156,37 @@ def process_edge_pull(cbl: CBList, x: jax.Array,
     if combine == "sum":
         msg = jnp.where(mask, msg, 0.0)
         per_blk = msg.sum(axis=1)
-        return jax.ops.segment_sum(per_blk, owner_seg, num_segments=nv)
+        return _segment_sum(per_blk, owner_seg, nv, impl)
     fill = jnp.inf if combine == "min" else -jnp.inf
     msg = jnp.where(mask, msg, fill)
     per_blk = msg.min(axis=1) if combine == "min" else msg.max(axis=1)
     return COMBINERS[combine](per_blk, owner_seg, num_segments=nv)
 
 
-@functools.partial(jax.jit, static_argnames=("weighted",))
+@functools.partial(jax.jit, static_argnames=("weighted", "impl"))
 def process_edge_push_feat(cbl: CBList, x: jax.Array,
                            active: Optional[jax.Array] = None,
-                           *, weighted: bool = True) -> jax.Array:
+                           *, weighted: bool = True,
+                           impl: str = "xla") -> jax.Array:
     """Feature-matrix push: y[dst, :] += x[src, :] * w over all edges.
 
     x: f32[NV, F].  Block-parallel: per-block source row broadcast over
     lanes (one gather of F values per block — GTChain locality), then a
-    segment-sum scatter keyed by the lane destinations.
+    segment-sum scatter keyed by the lane destinations.  With
+    ``impl="pallas"`` the row gather is ``block_gather`` and the scatter is
+    the GTChain ``segment_matmul`` kernel.
     """
     st = cbl.store
     nv = cbl.capacity_vertices
     owner_safe = jnp.maximum(st.owner, 0)
-    xs = x[owner_safe]                                   # [NB, F]
+    xs = _gather_values(x, owner_safe, impl)             # [NB, F]
     mask = lane_mask(st)
     if active is not None:
         mask = mask & active[owner_safe][:, None]
     scale = st.vals if weighted else jnp.ones_like(st.vals)
     msg = xs[:, None, :] * jnp.where(mask, scale, 0.0)[:, :, None]  # [NB,B,F]
     seg = jnp.where(mask, st.keys, nv)
-    return jax.ops.segment_sum(msg.reshape(-1, x.shape[1]),
-                               seg.ravel(), num_segments=nv)
+    return _segment_sum(msg.reshape(-1, x.shape[1]), seg.ravel(), nv, impl)
 
 
 def out_degrees(cbl: CBList) -> jax.Array:

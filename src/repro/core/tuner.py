@@ -28,12 +28,19 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import blockstore as bs
 from repro.core.cblist import CBList
 
 STRATEGIES = ("all_hard", "all_soft", "hybrid_block", "hybrid_hot")
+
+# Below this many edge lanes the kernel-launch fixed cost (stream sort +
+# tile padding + grid setup) exceeds any prefetch win — the oracle's single
+# fused segment op is strictly better.  Coarse analogue of the paper's
+# "too few coroutines to hide C_m" regime.
+MIN_PALLAS_LANES = 4096
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,18 +72,21 @@ def choose_lookahead(probe: SystemProbe, block_bytes: int) -> int:
 
 
 def choose_plan(cbl: CBList, task: str, probe: Optional[SystemProbe] = None,
-                on_tpu: bool = False) -> ExecPlan:
+                on_tpu: Optional[bool] = None) -> ExecPlan:
     """Execution strategy tuner (paper Fig. 8).
 
     ``task``: "scan_all" (PageRank/CC/LP dense sweeps), "frontier"
     (BFS/SSSP sparse steps), "query" (read_edge), "batch_update".
+    ``on_tpu`` defaults to backend autodetection.
     """
     probe = probe or SystemProbe()
+    if on_tpu is None:
+        on_tpu = jax.default_backend() == "tpu"
     contiguity = float(bs.gtchain_contiguity(cbl.store))       # P_h analogue
     frac_chunks = float((cbl.v_level <= 1).mean())             # small-chunk share
     block_bytes = cbl.store.block_width * 8                    # key+val lanes
+    lanes = cbl.store.num_blocks * cbl.store.block_width
     lookahead = choose_lookahead(probe, block_bytes)
-    impl = "pallas" if on_tpu else "xla"
 
     # partition: whole-graph sweeps use the fine-grained GTChain partition;
     # frontier/query tasks need per-vertex chains (GTChain only valid for
@@ -94,5 +104,25 @@ def choose_plan(cbl: CBList, task: str, probe: Optional[SystemProbe] = None,
         strategy = "hybrid_block"        # chunks contiguous; chains prefetched
     else:
         strategy = "all_soft"
+
+    # engine impl: the scalar-prefetched kernels only pay when (a) a real
+    # TPU pipeline exists, (b) the sweep is dense enough to amortize the
+    # stream setup, (c) the strategy calls for software prefetch at all
+    # (All-Hard == contiguous oracle ops by definition).
+    impl = ("pallas" if on_tpu and strategy != "all_hard"
+            and partition == "gtchain" and lanes >= MIN_PALLAS_LANES
+            else "xla")
     return ExecPlan(strategy=strategy, partition=partition,
                     lookahead=lookahead, impl=impl)
+
+
+def choose_engine_impl(cbl: CBList, task: str = "scan_all",
+                       probe: Optional[SystemProbe] = None,
+                       backend: Optional[str] = None) -> str:
+    """The ``impl=`` to pass to ``process_edge_push/pull/push_feat``.
+
+    Resolves outside jit (reads concrete contiguity stats); pass the result
+    into the jitted sweeps as the static ``impl`` argument.
+    """
+    on_tpu = (backend or jax.default_backend()) == "tpu"
+    return choose_plan(cbl, task, probe, on_tpu=on_tpu).impl

@@ -17,7 +17,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 
 def _kernel(ids_ref, table_ref, o_ref):
@@ -34,7 +35,7 @@ def block_gather(table: jax.Array, ids: jax.Array, *, rows_per_step: int = 8,
     """
     N = ids.shape[0]
     F = table.shape[1]
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = compat.prefetch_grid_spec(
         num_scalar_prefetch=1,
         grid=(N,),
         in_specs=[pl.BlockSpec((rows_per_step, F), lambda i, ids: (ids[i], 0))],
@@ -44,7 +45,7 @@ def block_gather(table: jax.Array, ids: jax.Array, *, rows_per_step: int = 8,
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((N * rows_per_step, F), table.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
         name="block_gather",

@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.kernels.block_gather.kernel import block_gather
 from repro.kernels.block_gather.ref import block_gather_ref
 
@@ -15,9 +16,10 @@ def gather_rows(table: jax.Array, ids: jax.Array, *, rows_per_step: int = 8,
                 impl: str = "xla") -> jax.Array:
     """Gather row groups from ``table`` by group index.
 
-    impl: "xla" | "pallas" | "pallas_interpret".
+    impl: "xla" | "pallas" (interpret-mode fallback off-TPU) |
+    "pallas_interpret".
     """
     if impl == "xla":
         return block_gather_ref(table, ids, rows_per_step)
     return block_gather(table, ids, rows_per_step=rows_per_step,
-                        interpret=(impl == "pallas_interpret"))
+                        interpret=compat.resolve_interpret(impl))

@@ -15,7 +15,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 
 def _kernel(ids_ref, seg_ref, wgt_ref, table_ref, o_ref):
@@ -44,7 +45,7 @@ def embedding_bag_sorted(table: jax.Array, ids: jax.Array, seg: jax.Array,
     """
     N = ids.shape[0]
     F = table.shape[1]
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = compat.prefetch_grid_spec(
         num_scalar_prefetch=2,
         grid=(N,),
         in_specs=[
@@ -59,7 +60,7 @@ def embedding_bag_sorted(table: jax.Array, ids: jax.Array, seg: jax.Array,
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((num_bags, F), table.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
         name="embedding_bag",

@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.kernels.embedding_bag.kernel import embedding_bag_sorted
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 
@@ -28,4 +29,4 @@ def embedding_bag(table: jax.Array, bag_ids: jax.Array,
     seg = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[:, None], (B, L))
     return embedding_bag_sorted(table, bag_ids.reshape(-1), seg.reshape(-1),
                                 weights.reshape(-1), num_bags=B,
-                                interpret=(impl == "pallas_interpret"))
+                                interpret=compat.resolve_interpret(impl))

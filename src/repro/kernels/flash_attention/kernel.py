@@ -15,7 +15,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 NEG_INF = -1e30
 
@@ -93,11 +94,11 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         out_specs=pl.BlockSpec((1, 1, tq, D), lambda b, h, i, j: (b, h, i, 0)),
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((tq,), jnp.float32),
-            pltpu.VMEM((tq,), jnp.float32),
-            pltpu.VMEM((tq, D), jnp.float32),
+            compat.vmem((tq,), jnp.float32),
+            compat.vmem((tq,), jnp.float32),
+            compat.vmem((tq, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

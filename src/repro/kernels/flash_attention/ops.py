@@ -5,6 +5,7 @@ import functools
 
 import jax
 
+from repro import compat
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 
@@ -19,4 +20,4 @@ def attention(q, k, v, *, scale: float, causal: bool = True, window: int = 0,
                              window=window, softcap=softcap)
     return flash_attention(q, k, v, scale=scale, causal=causal, window=window,
                            softcap=softcap, tq=tq, tk=tk,
-                           interpret=(impl == "pallas_interpret"))
+                           interpret=compat.resolve_interpret(impl))

@@ -20,7 +20,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 NEG_INF = -1e30
 
@@ -80,7 +81,7 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     npages = block_table.shape[1]
     kern = functools.partial(_kernel, page=page, npages=npages, scale=scale,
                              window=window, softcap=softcap)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = compat.prefetch_grid_spec(
         num_scalar_prefetch=2,
         grid=(B, KVH, npages),
         in_specs=[
@@ -94,16 +95,16 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         out_specs=pl.BlockSpec((1, 1, G, D),
                                lambda b, h, j, lens, bt: (b, h, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((G,), jnp.float32),
-            pltpu.VMEM((G,), jnp.float32),
-            pltpu.VMEM((G, D), jnp.float32),
+            compat.vmem((G,), jnp.float32),
+            compat.vmem((G,), jnp.float32),
+            compat.vmem((G, D), jnp.float32),
         ],
     )
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="paged_attention",

@@ -5,6 +5,7 @@ import functools
 
 import jax
 
+from repro import compat
 from repro.kernels.paged_attention.kernel import paged_attention
 from repro.kernels.paged_attention.ref import paged_attention_ref
 
@@ -19,4 +20,4 @@ def decode_attention(q, k_pages, v_pages, block_table, lengths, *,
                                    scale=scale, window=window, softcap=softcap)
     return paged_attention(q, k_pages, v_pages, block_table, lengths,
                            scale=scale, window=window, softcap=softcap,
-                           interpret=(impl == "pallas_interpret"))
+                           interpret=compat.resolve_interpret(impl))

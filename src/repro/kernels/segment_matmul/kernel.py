@@ -29,7 +29,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 
 def _kernel(out_idx_ref, rows_ref, data_ref, o_ref, *, rows_per_block: int,
@@ -67,7 +68,7 @@ def segment_matmul_sorted(out_idx: jax.Array, rows_p: jax.Array,
     """
     NT = out_idx.shape[0]
     F = data_p.shape[1]
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = compat.prefetch_grid_spec(
         num_scalar_prefetch=1,
         grid=(NT,),
         in_specs=[
@@ -82,7 +83,7 @@ def segment_matmul_sorted(out_idx: jax.Array, rows_p: jax.Array,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((num_blocks * rows_per_block, F),
                                        jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
         name="gtchain_segment_matmul",

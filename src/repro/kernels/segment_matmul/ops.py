@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.kernels import common
 from repro.kernels.segment_matmul.kernel import segment_matmul_sorted
 from repro.kernels.segment_matmul.ref import segment_sum_ref
@@ -25,8 +26,9 @@ def segment_matmul(data: jax.Array, seg: jax.Array, num_rows: int, *,
                    impl: str = "xla", assume_sorted: bool = False) -> jax.Array:
     """Segment-sum of ``data`` rows by ``seg`` (GTChain block-parallel).
 
-    impl: "xla" (oracle / All-Hard), "pallas" (TPU), "pallas_interpret"
-    (kernel body on CPU, for validation).
+    impl: "xla" (oracle / All-Hard), "pallas" (TPU; interpret-mode
+    fallback off-TPU), "pallas_interpret" (kernel body on CPU, for
+    validation).
     """
     if impl == "xla":
         return segment_sum_ref(data, seg, num_rows)
@@ -43,5 +45,5 @@ def segment_matmul(data: jax.Array, seg: jax.Array, num_rows: int, *,
     out = segment_matmul_sorted(out_idx, rows_p, data_p,
                                 num_blocks=common.cdiv(num_rows, rows_per_block),
                                 rows_per_block=rows_per_block, tile=tile,
-                                interpret=(impl == "pallas_interpret"))
+                                interpret=compat.resolve_interpret(impl))
     return out[:num_rows]

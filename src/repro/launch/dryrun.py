@@ -29,6 +29,7 @@ from pathlib import Path
 
 import jax
 
+from repro import compat
 from repro.configs import registry
 from repro.distributed.sharding import (out_shardings_for_cell,
                                         shardings_for_cell)
@@ -55,16 +56,17 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path,
     in_sh = shardings_for_cell(mesh, cb)
 
     out_sh = out_shardings_for_cell(mesh, cb, in_sh)
-    # set_mesh: the Mesh context plus the sharding context shard_map and
-    # bare-PartitionSpec constraints resolve against
-    with mesh, jax.set_mesh(mesh):
+    # compat.set_mesh: jax.set_mesh where it exists, else the Mesh context
+    # manager — either way shard_map and bare-PartitionSpec constraints
+    # resolve against this mesh
+    with compat.set_mesh(mesh):
         lowered = jax.jit(cb.step_fn, in_shardings=in_sh,
                           out_shardings=out_sh).lower(*cb.arg_specs)
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis() or {}
+        cost = compat.cost_analysis(compiled)
 
     hlo_text = compiled.as_text()
     parsed = hlo_cost.parse_hlo(hlo_text)

@@ -49,6 +49,39 @@ def _shape_dims(shape_str: str):
     return [int(d) for d in m.group(2).split(",") if d]
 
 
+def _split_operands(args: str) -> List[str]:
+    """Split an HLO operand list on top-level commas only (shapes like
+    ``f32[128,256]{1,0}`` carry commas inside their brackets)."""
+    out: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in args:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    out.append("".join(cur))
+    return [o.strip() for o in out if o.strip()]
+
+
+def _operand_shape(tok: str, shapes: Dict[str, str]) -> str:
+    """Shape string of one operand token.
+
+    HLO spells operands either bare (``%p``) or inline-typed
+    (``f32[128,256]{1,0} %p``); bare ones resolve through the global
+    instruction-shape table.
+    """
+    tok = tok.strip()
+    if "[" in tok:
+        return tok.split()[0]
+    return shapes.get(tok.lstrip("%"), "")
+
+
 def parse_hlo(hlo_text: str) -> Dict:
     # ---- split into computations -----------------------------------------
     comp_name = None
@@ -107,8 +140,11 @@ def parse_hlo(hlo_text: str) -> Dict:
 
     # ---- dots -------------------------------------------------------------
     flops = 0.0
+    # first operand may be inline-typed ("f32[128,256]{1,0} %p") — commas
+    # inside its [] / {} are part of the token, not operand separators
     dot_re = re.compile(
-        r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\S+)\s+dot\(\s*%?([\w\.\-]+)")
+        r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\S+)\s+dot\("
+        r"\s*((?:\[[^\]]*\]|\{[^}]*\}|[^,()])*)")
     for cname, lines in comps.items():
         m_c = mult[cname]
         for ln in lines:
@@ -119,8 +155,7 @@ def parse_hlo(hlo_text: str) -> Dict:
             out_n = 1
             for d in out_shape:
                 out_n *= d
-            lhs = dm.group(3)
-            lhs_dims = _shape_dims(shapes.get(lhs, "")) or []
+            lhs_dims = _shape_dims(_operand_shape(dm.group(3), shapes)) or []
             cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
             contract = 1
             if cm and lhs_dims:
@@ -142,10 +177,8 @@ def parse_hlo(hlo_text: str) -> Dict:
                 if not mm:
                     continue
                 out_bytes = _shape_bytes(mm.group(1))
-                operands = [o.strip().lstrip("%")
-                            for o in mm.group(2).split(",") if o.strip()]
-                op_bytes = sum(_shape_bytes(shapes.get(o, ""))
-                               for o in operands)
+                op_bytes = sum(_shape_bytes(_operand_shape(o, shapes))
+                               for o in _split_operands(mm.group(2)))
                 gm = re.search(r"replica_groups=\{?\{([\d,]*)\}", ln)
                 group = len(gm.group(1).split(",")) if gm else 0
                 if group == 0:
@@ -190,23 +223,19 @@ def parse_hlo(hlo_text: str) -> Dict:
                 if cname == entry:
                     param_bytes += _shape_bytes(out_shape)
                 continue
+            operands = _split_operands(args)
             if op in ("dot", "convolution"):
-                operands = [o.strip().lstrip("%")
-                            for o in args.split(",") if o.strip()]
-                in_b = sum(_shape_bytes(shapes.get(o, ""))
+                in_b = sum(_shape_bytes(_operand_shape(o, shapes))
                            for o in operands[:2])
                 mem_bytes += (_shape_bytes(out_shape) + in_b) * m_c
             elif op == "dynamic-update-slice":
                 # aliased in place: traffic = the update slice, not the buffer
-                operands = [o.strip().lstrip("%")
-                            for o in args.split(",") if o.strip()]
-                upd = _shape_bytes(shapes.get(operands[1], "")) \
+                upd = _shape_bytes(_operand_shape(operands[1], shapes)) \
                     if len(operands) > 1 else 0
                 mem_bytes += 2.0 * upd * m_c
             elif op == "scatter":
-                operands = [o.strip().lstrip("%")
-                            for o in args.split(",") if o.strip()]
-                upd = _shape_bytes(shapes.get(operands[-1], ""))
+                upd = _shape_bytes(_operand_shape(operands[-1], shapes)) \
+                    if operands else 0
                 mem_bytes += 2.0 * upd * m_c
             elif op in _MOVE2 or op.endswith("-start"):
                 mem_bytes += 2.0 * _shape_bytes(out_shape) * m_c

@@ -17,6 +17,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.kernels.flash_attention import attention as flash_attention
 
 Params = Dict[str, Any]
@@ -266,7 +267,7 @@ def apply_moe_ep(p: Params, cfg: LMConfig, x: jax.Array
         return (xb_loc.reshape(E, C_loc, d), se, st, rank,
                 gate.reshape(-1)[order])
 
-    xb, se, st, rank, sg = jax.shard_map(
+    xb, se, st, rank, sg = compat.shard_map(
         dispatch,
         in_specs=P(ba, None),
         out_specs=(P(None, ba, None), P(ba), P(ba), P(ba), P(ba)),
@@ -291,7 +292,7 @@ def apply_moe_ep(p: Params, cfg: LMConfig, x: jax.Array
             contrib.astype(jnp.float32))
         return jax.lax.psum(y_part, "model").astype(cfg.dtype)
 
-    y = jax.shard_map(
+    y = compat.shard_map(
         combine,
         in_specs=(P("model", ba, None), P(ba), P(ba), P(ba), P(ba)),
         out_specs=P(ba, None),

@@ -11,7 +11,11 @@ Invariants checked after every batch:
 """
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (DELETE, INSERT, NULL, PAD, batch_update,
                         build_from_coo, out_degrees, read_edges, to_coo)

@@ -1,0 +1,124 @@
+"""Compat-layer coverage: both Pallas API spellings, interpret fallback,
+mesh context, cost_analysis normalization, shard_map signature shim."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+
+
+# --------------------------------------------------------------------------
+# tpu_compiler_params under every historical spelling
+# --------------------------------------------------------------------------
+
+class _NewStyleParams:
+    """Modern spelling: pltpu.CompilerParams(dimension_semantics=...)."""
+
+    def __init__(self, dimension_semantics=None, vmem_limit_bytes=None):
+        self.dimension_semantics = dimension_semantics
+        self.vmem_limit_bytes = vmem_limit_bytes
+
+
+class _OldStyleParams:
+    """0.4.x spelling: pltpu.TPUCompilerParams(dimension_semantics=...)."""
+
+    def __init__(self, dimension_semantics=None):
+        self.dimension_semantics = dimension_semantics
+
+
+def test_compiler_params_new_spelling(monkeypatch):
+    monkeypatch.setattr(compat, "pltpu",
+                        types.SimpleNamespace(CompilerParams=_NewStyleParams))
+    p = compat.tpu_compiler_params(dimension_semantics=("arbitrary",),
+                                   vmem_limit_bytes=1 << 20)
+    assert isinstance(p, _NewStyleParams)
+    assert p.dimension_semantics == ("arbitrary",)
+    assert p.vmem_limit_bytes == 1 << 20
+
+
+def test_compiler_params_old_spelling(monkeypatch):
+    monkeypatch.setattr(compat, "pltpu",
+                        types.SimpleNamespace(TPUCompilerParams=_OldStyleParams))
+    p = compat.tpu_compiler_params(dimension_semantics=("parallel", "arbitrary"))
+    assert isinstance(p, _OldStyleParams)
+    assert p.dimension_semantics == ("parallel", "arbitrary")
+
+
+def test_compiler_params_drops_unknown_fields(monkeypatch):
+    monkeypatch.setattr(compat, "pltpu",
+                        types.SimpleNamespace(TPUCompilerParams=_OldStyleParams))
+    p = compat.tpu_compiler_params(dimension_semantics=("arbitrary",),
+                                   vmem_limit_bytes=1 << 20)   # not in 0.4.x
+    assert isinstance(p, _OldStyleParams)
+
+
+def test_compiler_params_dict_fallback(monkeypatch):
+    monkeypatch.setattr(compat, "pltpu", types.SimpleNamespace())
+    p = compat.tpu_compiler_params(dimension_semantics=("arbitrary",))
+    assert p == {"mosaic": {"dimension_semantics": ("arbitrary",)}}
+
+
+def test_installed_jax_accepts_compat_params():
+    """Whatever this container ships, the params object must feed pallas_call."""
+    import jax.experimental.pallas as pl
+
+    def k(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * 2.0
+
+    x = jnp.arange(8.0, dtype=jnp.float32).reshape(1, 8)
+    out = pl.pallas_call(
+        k, out_shape=jax.ShapeDtypeStruct((1, 8), jnp.float32),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("arbitrary",)),
+        interpret=compat.resolve_interpret("pallas"),
+        grid=(1,),
+    )(x)
+    np.testing.assert_allclose(np.asarray(out), np.arange(8.0).reshape(1, 8) * 2)
+
+
+# --------------------------------------------------------------------------
+# interpret resolution
+# --------------------------------------------------------------------------
+
+def test_resolve_interpret():
+    assert compat.resolve_interpret("pallas_interpret") is True
+    on_tpu = jax.default_backend() == "tpu"
+    assert compat.resolve_interpret("pallas") is (not on_tpu)
+    with pytest.raises(ValueError):
+        compat.resolve_interpret("xla")
+
+
+# --------------------------------------------------------------------------
+# mesh context + shard_map
+# --------------------------------------------------------------------------
+
+def test_set_mesh_enters_ambient_context():
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    assert compat.current_mesh() is None or compat.current_mesh().empty is False
+    with compat.set_mesh(mesh) as m:
+        assert m is mesh
+        assert compat.current_mesh() is mesh
+    assert compat.current_mesh() is not mesh
+
+
+def test_shard_map_new_signature_on_any_jax():
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    x = jnp.arange(8.0, dtype=jnp.float32)
+    with compat.set_mesh(mesh):
+        y = compat.shard_map(lambda v: v * 2.0, in_specs=P("data"),
+                             out_specs=P("data"),
+                             axis_names={"data"})(x)
+    np.testing.assert_allclose(np.asarray(y), np.arange(8.0) * 2)
+
+
+def test_cost_analysis_normalized():
+    compiled = jax.jit(lambda a, b: a @ b).lower(
+        jax.ShapeDtypeStruct((8, 8), jnp.float32),
+        jax.ShapeDtypeStruct((8, 8), jnp.float32)).compile()
+    cost = compat.cost_analysis(compiled)
+    assert isinstance(cost, dict)
+    assert float(cost.get("flops", 0)) > 0

@@ -78,7 +78,8 @@ x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 32), jnp.float32)
 y_base, _ = apply_moe(p, cfg, x)
 cfg_ep = dataclasses.replace(cfg, act_shard_axes=("data",), ep_shard_map=True,
                              data_axis_size=4, model_axis_size=2)
-with jax.set_mesh(mesh):
+from repro.compat import set_mesh
+with set_mesh(mesh):
     y_ep, _ = jax.jit(lambda pp, xx: apply_moe(pp, cfg_ep, xx),
                       in_shardings=(NamedSharding(mesh, P()),
                                     NamedSharding(mesh, P("data", None, None))),
