@@ -1,0 +1,87 @@
+"""Serving-layer benchmark: sustained update throughput and analytics
+staleness vs flush cadence on the ``repro.stream`` GraphService.
+
+Two questions the paper's interleaved-workload figures ask of a serving
+system, answered for this implementation:
+
+  * how many updates/s does the full admission -> coalesce -> flush ->
+    maintenance pipeline sustain (vs the raw ``batch_update`` ceiling of
+    bench_update);
+  * how stale do served analytics get when flushes are batched — L1 distance
+    between the ranks served from the last snapshot epoch and exact ranks on
+    the fully-applied graph, per flush cadence (the freshness/throughput
+    trade the scheduler exposes).
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import dataset, emit
+from repro.core import batch_update
+from repro.data import update_stream
+from repro.graph import pagerank
+from repro.stream import GraphService
+
+N_BATCHES = 6
+BATCH = 256
+PR_KW = dict(max_iters=40, tol=1e-10)
+
+
+def _service(nv, src, dst, w):
+    return GraphService.from_coo(
+        src, dst, w, num_vertices=nv,
+        num_blocks=max(64, 2 * len(src) // 32), block_width=32,
+        log_capacity=max(1024, BATCH * 4))
+
+
+def run():
+    nv, src, dst, w = dataset("rmat_tiny")
+    batches = list(update_stream(nv, (np.asarray(src), np.asarray(dst)),
+                                 BATCH, N_BATCHES + 1, seed=4))
+
+    # --- sustained update throughput (apply + flush + maintenance) ---------
+    svc = _service(nv, src, dst, w)
+    us0, ud0, uw0, op0 = batches[0]
+    svc.apply(us0, ud0, uw0, op0)
+    svc.flush()                                  # jit warmup epoch
+    t0 = time.perf_counter()
+    for us, ud, uw, op in batches[1:]:
+        svc.apply(us, ud, uw, op)
+        svc.flush()
+    svc.snapshot.cbl.v_deg.block_until_ready()
+    t = (time.perf_counter() - t0) / N_BATCHES
+    emit("stream/serve_update_flush", t,
+         f"eps={BATCH / t:.0f},grows={svc.stats.grows},"
+         f"rebuilds={svc.stats.rebuilds}")
+
+    # --- analytics staleness vs flush cadence ------------------------------
+    out = {"serve_batch_s": t}
+    for cadence in (1, 2, 4):
+        svc = _service(nv, src, dst, w)
+        exact_cbl = svc.snapshot.cbl                 # fully-applied reference
+        staleness = []
+        t_refresh = 0.0
+        for i, (us, ud, uw, op) in enumerate(batches[:N_BATCHES]):
+            svc.apply(us, ud, uw, op)
+            if (i + 1) % cadence == 0:
+                svc.flush()
+            exact_cbl = batch_update(exact_cbl, jnp.asarray(us),
+                                     jnp.asarray(ud), jnp.asarray(uw),
+                                     jnp.asarray(op))
+            t1 = time.perf_counter()
+            served = svc.analytics("pagerank", **PR_KW)
+            served.block_until_ready()
+            t_refresh += time.perf_counter() - t1
+            exact = pagerank(exact_cbl, **PR_KW)
+            staleness.append(float(jnp.abs(served[:nv] - exact[:nv]).sum()))
+        l1 = float(np.mean(staleness))
+        emit(f"stream/staleness_flush_every_{cadence}",
+             t_refresh / N_BATCHES,
+             f"l1={l1:.2e},pending_max={cadence * BATCH}")
+        out[f"staleness_l1_cadence{cadence}"] = l1
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -14,6 +14,10 @@ from repro.data import rmat_edges
 
 SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
 
+# every emit() row also lands here so the harness can dump machine-readable
+# BENCH_<name>.json files next to the CSV stream (benchmarks/run.py)
+ROWS: list = []
+
 
 def dataset(name="rmat_small"):
     """Shared benchmark graphs (power-law skew, shuffled load order like the
@@ -54,3 +58,5 @@ def time_fn(fn: Callable, *args, iters=5, warmup=2) -> float:
 
 def emit(name: str, seconds: float, derived: str = ""):
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+    ROWS.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
+                 "derived": derived})

@@ -1,36 +1,58 @@
 """Benchmark harness: one bench per paper table/figure + roofline report.
 
-Prints ``name,us_per_call,derived`` CSV.  Scale with REPRO_BENCH_SCALE
-(default 1.0; CI can use 0.25).
+Prints ``name,us_per_call,derived`` CSV and, per bench module, writes a
+machine-readable ``BENCH_<name>.json`` (same rows + the module's summary
+dict) so CI runs accumulate a perf trajectory.  Scale with
+REPRO_BENCH_SCALE (default 1.0; CI uses 0.25).
 
   Fig 10 -> bench_query      Fig 11 -> bench_analysis
   Fig 12 -> bench_update     Fig 13 -> bench_batchsize
   Fig 14 / Table 3 -> bench_interleave
+  serving layer (repro.stream) -> bench_stream
   §Roofline (dry-run derived) -> roofline (requires experiments/dryrun/)
 """
+import json
 import sys
 import traceback
 
 
+def _dump(short: str, rows, summary) -> None:
+    payload = {"bench": short, "rows": rows}
+    if isinstance(summary, dict):
+        payload["summary"] = {
+            k: v for k, v in summary.items()
+            if isinstance(v, (int, float, str, bool, dict, list))}
+    path = f"BENCH_{short}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"wrote {path}", file=sys.stderr)
+
+
 def main() -> None:
     from benchmarks import (bench_analysis, bench_batchsize, bench_interleave,
-                            bench_query, bench_update)
+                            bench_query, bench_stream, bench_update, common)
     print("name,us_per_call,derived")
     ok = True
     for mod in (bench_query, bench_analysis, bench_update, bench_batchsize,
-                bench_interleave):
+                bench_interleave, bench_stream):
+        short = mod.__name__.split(".")[-1].removeprefix("bench_")
+        start = len(common.ROWS)
         try:
-            mod.run()
+            summary = mod.run()
         except Exception:
             ok = False
             print(f"{mod.__name__},FAILED,", file=sys.stderr)
             traceback.print_exc()
+            continue
+        _dump(short, common.ROWS[start:], summary)
     try:
         from pathlib import Path
 
         from benchmarks import roofline
         if Path("experiments/dryrun").exists():
+            start = len(common.ROWS)
             roofline.run()
+            _dump("roofline", common.ROWS[start:], None)
         else:
             print("roofline,skipped,no experiments/dryrun (run "
                   "python -m repro.launch.dryrun --all first)")

@@ -1,10 +1,12 @@
-"""End-to-end dynamic graph processing driver (the paper's workload).
+"""End-to-end dynamic graph serving on GraphService (the paper's workload).
 
-A stream of edge-update batches is applied to a CBList while incremental
-PageRank keeps analytics fresh — updates and computation interleave, with
-the maintenance rebuild triggered by the tuner's contiguity probe.  This is
-the GastCoCo serving loop: the equivalent of "fraud detection on a live
-transaction graph".
+A stream of edge-update batches flows through the ``repro.stream`` serving
+layer while incremental PageRank keeps analytics fresh: updates are admitted
+into the coalescing log, flushes publish epoch-versioned snapshots, and the
+maintenance scheduler compacts / rebuilds / grows storage from its watched
+statistics — the GastCoCo serving loop ("fraud detection on a live
+transaction graph") with every concern owned by the subsystem instead of
+hand-rolled here.
 
   PYTHONPATH=src python examples/dynamic_graph_pagerank.py --batches 10
 """
@@ -14,10 +16,9 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (batch_update, build_from_coo, gtchain_contiguity,
-                        rebuild)
+from repro.core import gtchain_contiguity
 from repro.data import rmat_edges, update_stream
-from repro.graph import incremental_pagerank, pagerank
+from repro.stream import GraphService, MaintenancePolicy
 
 
 def main():
@@ -26,43 +27,52 @@ def main():
     ap.add_argument("--edges", type=int, default=16000)
     ap.add_argument("--batch", type=int, default=512)
     ap.add_argument("--batches", type=int, default=10)
-    ap.add_argument("--rebuild-threshold", type=float, default=0.9)
+    ap.add_argument("--flush-every", type=int, default=1,
+                    help="apply N batches per flush (analytics staleness knob)")
+    ap.add_argument("--contiguity-floor", type=float, default=0.9)
     args = ap.parse_args()
 
     src, dst = rmat_edges(args.vertices, args.edges, seed=0)
-    cbl = build_from_coo(jnp.asarray(src), jnp.asarray(dst), None,
-                         num_vertices=args.vertices,
-                         num_blocks=args.edges // 8, block_width=32)
-    ranks = pagerank(cbl, max_iters=50, tol=1e-9)
-    print(f"initial: {args.edges} edges, pagerank converged")
+    service = GraphService.from_coo(
+        src, dst, num_vertices=args.vertices,
+        num_blocks=args.edges // 8, block_width=32,
+        log_capacity=max(4096, args.batch * 4),
+        policy=MaintenancePolicy(contiguity_floor=args.contiguity_floor))
+    ranks = service.analytics("pagerank", max_iters=50, tol=1e-9)
+    print(f"initial: {args.edges} edges, pagerank converged "
+          f"(epoch {service.epoch})")
 
     stream = update_stream(args.vertices, (src, dst), args.batch,
                            args.batches, seed=1)
-    t_updates, t_ranks, rebuilds = 0.0, 0.0, 0
+    t_updates, t_ranks = 0.0, 0.0
     for i, (us, ud, uw, op) in enumerate(stream):
         t0 = time.perf_counter()
-        cbl = batch_update(cbl, jnp.asarray(us), jnp.asarray(ud),
-                           jnp.asarray(uw), jnp.asarray(op))
-        cbl.v_deg.block_until_ready()
+        receipt = service.apply(us, ud, uw, op)
+        if (i + 1) % args.flush_every == 0:
+            report = service.flush()
+        service.snapshot.cbl.v_deg.block_until_ready()
         t_updates += time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        ranks = incremental_pagerank(cbl, ranks, max_iters=15, tol=1e-8)
+        ranks = service.analytics("pagerank", max_iters=15, tol=1e-8)
         ranks.block_until_ready()
         t_ranks += time.perf_counter() - t0
 
-        contig = float(gtchain_contiguity(cbl.store))
-        if contig < args.rebuild_threshold:
-            cbl = rebuild(cbl, max_edges=args.edges * 2)
-            rebuilds += 1
         if (i + 1) % 5 == 0:
-            print(f"  batch {i + 1}: contiguity={contig:.3f} "
+            contig = float(gtchain_contiguity(service.snapshot.cbl.store))
+            print(f"  batch {i + 1}: epoch={service.epoch} "
+                  f"contiguity={contig:.3f} pending={service.pending_updates} "
                   f"top={int(jnp.argmax(ranks))}")
 
+    service.flush()
+    st = service.stats
     eps = args.batch * args.batches / t_updates
     print(f"processed {args.batches} batches: "
-          f"{eps:,.0f} updates/s, {t_ranks / args.batches * 1e3:.1f} ms/refresh, "
-          f"{rebuilds} maintenance rebuilds")
+          f"{eps:,.0f} updates/s, {t_ranks / args.batches * 1e3:.1f} ms/refresh")
+    print(f"maintenance: {st.compacts} compacts, {st.rebuilds} rebuilds, "
+          f"{st.grows} grows; {st.coalesced} coalesced, "
+          f"{st.applied_inserts} inserts / {st.applied_deletes} deletes "
+          f"applied over {st.flushes} flushes")
 
 
 if __name__ == "__main__":

@@ -1,10 +1,13 @@
 """GastCoCo core: CBList storage + prefetch co-design (paper contribution)."""
 from repro.core.blockstore import (BlockStore, NULL, PAD, alloc_blocks, compact,
-                                   free_blocks, gtchain_contiguity,
+                                   free_blocks, free_blocks_left,
+                                   grow_store, gtchain_contiguity,
                                    gtchain_order, make_store, sort_blocks)
-from repro.core.cblist import (CBList, block_fences, build_from_coo, degrees,
-                               empty, rebuild, to_coo)
-from repro.core.updates import (DELETE, INSERT, NOP, add_vertices, batch_update,
+from repro.core.cblist import (CBList, block_fences, build_from_coo,
+                               compact_cbl, degrees, empty, grow, rebuild,
+                               to_coo)
+from repro.core.updates import (DELETE, INSERT, NOP, UpdateStats, add_vertices,
+                                batch_update, batch_update_stats,
                                 delete_vertices, read_edges, upsert_edges)
 from repro.core.engine import (in_degrees, out_degrees, process_edge_pull,
                                process_edge_push, process_edge_push_feat,

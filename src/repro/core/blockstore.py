@@ -107,6 +107,47 @@ def free_blocks_left(store: BlockStore) -> jax.Array:
     return store.free_top
 
 
+def grow_store(store: BlockStore, new_num_blocks: int) -> BlockStore:
+    """Grow the pool to ``new_num_blocks`` blocks (pure pad, no data motion).
+
+    Existing blocks keep their physical ids, so every chain pointer, owner
+    record and vertex head/tail stays valid.  The new blocks are pushed
+    *under* the existing free entries: allocation keeps handing out the old
+    free blocks first (in their original order), then the new ids in
+    ascending physical order (GTChain-friendly).
+
+    This is the maintenance scheduler's capacity-grow action — a host-side
+    reshape executed between jitted steps (shapes change, so it cannot run
+    inside jit; see DESIGN.md §8).
+    """
+    nb = store.num_blocks
+    if new_num_blocks < nb:
+        raise ValueError(f"grow_store: {new_num_blocks} < current {nb}")
+    if new_num_blocks == nb:
+        return store
+    k = new_num_blocks - nb
+    bw = store.block_width
+
+    def pad_rows(x, fill):
+        return jnp.concatenate(
+            [x, jnp.full((k,) + x.shape[1:], fill, x.dtype)])
+
+    # stack layout: [new ids descending | old stack entries]; pops come from
+    # index free_top-1 downward, so old free blocks drain first.
+    fresh = jnp.arange(new_num_blocks - 1, nb - 1, -1, dtype=jnp.int32)
+    free_stack = jnp.concatenate([fresh, store.free_stack])
+    return BlockStore(
+        keys=pad_rows(store.keys, PAD),
+        vals=pad_rows(store.vals, jnp.float32(0.0)),
+        count=pad_rows(store.count, jnp.int32(0)),
+        owner=pad_rows(store.owner, jnp.int32(NULL)),
+        nxt=pad_rows(store.nxt, jnp.int32(NULL)),
+        seq=pad_rows(store.seq, jnp.int32(0)),
+        free_stack=free_stack,
+        free_top=store.free_top + k,
+    )
+
+
 def gtchain_order(store: BlockStore) -> jax.Array:
     """Block ids in Global-Traversal-Chain order (owner-major, chain-seq minor).
 

@@ -184,6 +184,47 @@ def rebuild(cbl: CBList, max_edges: int, num_blocks: Optional[int] = None,
                           valid=valid)._replace(n_vertices=cbl.n_vertices)
 
 
+@jax.jit
+def compact_cbl(cbl: CBList) -> CBList:
+    """Defragment the store *and* remap the vertex head/tail pointers.
+
+    :func:`repro.core.blockstore.compact` permutes physical block ids, so the
+    vertex table's traversal/update pointers must be remapped with the same
+    permutation — compacting only the store leaves them stale.  Restores
+    GTChain contiguity to 1.0 without touching lane contents (cheaper than
+    :func:`rebuild`, which also re-sorts chains range-disjoint).
+    """
+    order = bs.gtchain_order(cbl.store)
+    inv = jnp.argsort(order).astype(jnp.int32)
+    remap = lambda ids: jnp.where(ids == NULL, NULL, inv[jnp.maximum(ids, 0)])
+    return cbl._replace(store=bs.compact(cbl.store),
+                        v_head=remap(cbl.v_head), v_tail=remap(cbl.v_tail))
+
+
+def grow(cbl: CBList, num_blocks: Optional[int] = None,
+         vertex_capacity: Optional[int] = None) -> CBList:
+    """Grow block and/or vertex capacity in place (pure pads, no data motion).
+
+    The maintenance scheduler's capacity-grow: chains, heads and degrees all
+    survive because block ids and vertex ids are stable under padding.  Runs
+    host-side between jitted steps (output shapes differ from input shapes).
+    """
+    store = cbl.store
+    if num_blocks is not None and num_blocks != store.num_blocks:
+        store = bs.grow_store(store, num_blocks)
+    v_deg, v_level = cbl.v_deg, cbl.v_level
+    v_head, v_tail = cbl.v_head, cbl.v_tail
+    nv = cbl.capacity_vertices
+    if vertex_capacity is not None and vertex_capacity > nv:
+        k = vertex_capacity - nv
+        v_deg = jnp.concatenate([v_deg, jnp.zeros((k,), jnp.int32)])
+        v_level = jnp.concatenate([v_level, jnp.zeros((k,), jnp.int32)])
+        v_head = jnp.concatenate([v_head, jnp.full((k,), NULL, jnp.int32)])
+        v_tail = jnp.concatenate([v_tail, jnp.full((k,), NULL, jnp.int32)])
+    return CBList(store=store, v_deg=v_deg, v_level=v_level,
+                  v_head=v_head, v_tail=v_tail, n_vertices=cbl.n_vertices)
+
+
 def degrees(cbl: CBList) -> jax.Array:
     return cbl.v_deg
 

@@ -31,6 +31,21 @@ DELETE = -1
 NOP = 0
 
 
+class UpdateStats(NamedTuple):
+    """Per-batch accounting surfaced by :func:`batch_update_stats`.
+
+    ``dropped_edges`` is the overflow counter: inserts that could not be
+    placed because the free stack ran out of blocks.  The structure stays
+    fully consistent when it is nonzero (degrees/counts only reflect placed
+    edges) — the caller is expected to grow capacity
+    (:func:`repro.core.cblist.grow`) and retry the batch on the pre-update
+    CBList; :class:`repro.stream.GraphService` does exactly that.
+    """
+    dropped_edges: jax.Array    # i32[] inserts not placed (allocator full)
+    applied_inserts: jax.Array  # i32[] inserts placed
+    applied_deletes: jax.Array  # i32[] deletes that located + removed an edge
+
+
 def _locate(cbl: CBList, qsrc: jax.Array, qdst: jax.Array, active: jax.Array):
     """Chain-walk locate of (src, dst): returns (found_blk, found_lane).
 
@@ -97,7 +112,7 @@ def _dedupe_first(src, dst, mask):
     return keep & mask
 
 
-def _apply_deletes(cbl: CBList, src, dst, mask) -> CBList:
+def _apply_deletes(cbl: CBList, src, dst, mask):
     mask = _dedupe_first(src, dst, mask)
     fblk, flane = _locate(cbl, src, dst, mask)
     fblk = jnp.where(mask, fblk, NULL)
@@ -117,10 +132,11 @@ def _apply_deletes(cbl: CBList, src, dst, mask) -> CBList:
     removed_per_v = jax.ops.segment_sum(found.astype(jnp.int32),
                                         jnp.where(found, src, nvc),
                                         num_segments=nvc)
-    return cbl._replace(store=st, v_deg=cbl.v_deg - removed_per_v)
+    return (cbl._replace(store=st, v_deg=cbl.v_deg - removed_per_v),
+            found.sum(dtype=jnp.int32))
 
 
-def _apply_inserts(cbl: CBList, src, dst, w, mask) -> CBList:
+def _apply_inserts(cbl: CBList, src, dst, w, mask):
     U = src.shape[0]
     st = cbl.store
     B = st.block_width
@@ -143,6 +159,11 @@ def _apply_inserts(cbl: CBList, src, dst, w, mask) -> CBList:
     nb_new = -(-need // B)                               # ceil
 
     # ---- allocate new blocks (free-stack pop, GTChain-ascending) ---------
+    # The free stack pops in slot order, so allocation failures past
+    # ``avail`` are a *suffix* of the slot sequence: for each vertex the
+    # allocated blocks are a prefix of its requested chain extension, and an
+    # allocated block always receives all of its intended edges.
+    avail = st.free_top                                  # blocks left pre-pop
     total_new = nb_new.sum()
     st, nid = bs.alloc_blocks(st, U, total_new)          # i32[U], NULL past end
     offs = _exclusive_cumsum(nb_new)                     # per-vertex first slot
@@ -150,25 +171,33 @@ def _apply_inserts(cbl: CBList, src, dst, w, mask) -> CBList:
     j = jnp.arange(U, dtype=jnp.int32)
     v_of_j = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
     j_ok = j < total_new
+    alloc_ok = j_ok & (j < avail)                        # nid[j] != NULL
     v_safe = jnp.where(j_ok, jnp.minimum(v_of_j, nvc - 1), 0)
     q = j - offs[v_safe]                                 # chain-local index
 
-    nid_idx = jnp.where(j_ok, nid, nb)                   # drop past-end scatters
+    # NULL (=-1) scatter indices WRAP under mode="drop" (negative indexing),
+    # so failed allocations must be routed out of bounds explicitly.
+    nid_idx = jnp.where(alloc_ok, nid, nb)
     owner = st.owner.at[nid_idx].set(jnp.where(j_ok, v_safe, NULL), mode="drop")
     seq = st.seq.at[nid_idx].set(cbl.v_level[v_safe] + q, mode="drop")
     # chain links among new blocks: slot j -> slot j+1 when same vertex
+    # (nid[j+1] is NULL when slot j+1 failed — correct end-of-chain value)
     nxt_same = jnp.concatenate([(v_of_j[1:] == v_of_j[:-1]), jnp.zeros((1,), bool)])
     nxt_tgt = jnp.concatenate([nid[1:], jnp.full((1,), NULL, jnp.int32)])
     nxt = st.nxt.at[nid_idx].set(jnp.where(nxt_same & j_ok, nxt_tgt, NULL),
                                  mode="drop")
     # link old tail -> first new block / set head when chain was empty
-    is_first = j_ok & (q == 0)
+    is_first = alloc_ok & (q == 0)
     old_tail = tail[v_safe]
     link_idx = jnp.where(is_first & (old_tail != NULL), old_tail, nb)
     nxt = nxt.at[link_idx].set(nid, mode="drop")
     head_idx = jnp.where(is_first & (old_tail == NULL), v_safe, nvc)
     v_head = cbl.v_head.at[head_idx].set(nid, mode="drop")
-    is_last = j_ok & (q == nb_new[v_safe] - 1)
+    # per-vertex blocks actually allocated (prefix of the requested chain)
+    nb_got = jax.ops.segment_sum(alloc_ok.astype(jnp.int32),
+                                 jnp.where(alloc_ok, v_safe, nvc),
+                                 num_segments=nvc)
+    is_last = alloc_ok & (q == nb_got[v_safe] - 1)
     tail_idx = jnp.where(is_last, v_safe, nvc)
     v_tail = cbl.v_tail.at[tail_idx].set(nid, mode="drop")
 
@@ -186,21 +215,49 @@ def _apply_inserts(cbl: CBList, src, dst, w, mask) -> CBList:
     r2 = r - slack[s_safe]
     slot = offs[s_safe] + r2 // B
     new_blk = nid[jnp.clip(slot, 0, U - 1)]
+    placed = ok & (in_slack | (slot < avail))            # edge has a real home
     e_blk = jnp.where(in_slack, tail[s_safe], new_blk)
     e_lane = jnp.where(in_slack, tail_cnt[s_safe] + r, r2 % B)
-    e_blk = jnp.where(ok, e_blk, nb)                     # pads dropped
+    e_blk = jnp.where(placed, e_blk, nb)                 # pads + overflow dropped
     keys = st.keys.at[e_blk, jnp.clip(e_lane, 0, B - 1)].set(d, mode="drop")
     vals = st.vals.at[e_blk, jnp.clip(e_lane, 0, B - 1)].set(ww, mode="drop")
 
     st = st._replace(keys=keys, vals=vals, count=count, owner=owner,
                      nxt=nxt, seq=seq)
     # restore in-block sorted order for every touched block
-    st = bs.sort_blocks(st, jnp.where(ok, jnp.minimum(e_blk, nb - 1), NULL))
-    st = bs.sort_blocks(st, jnp.where(j_ok, nid, NULL))
+    st = bs.sort_blocks(st, jnp.where(placed, jnp.minimum(e_blk, nb - 1), NULL))
+    st = bs.sort_blocks(st, jnp.where(alloc_ok, nid, NULL))
 
-    return cbl._replace(store=st, v_deg=cbl.v_deg + c,
-                        v_level=cbl.v_level + nb_new,
-                        v_head=v_head, v_tail=v_tail)
+    c_placed = jax.ops.segment_sum(placed.astype(jnp.int32),
+                                   jnp.where(placed, s, nvc), num_segments=nvc)
+    dropped = (ok & ~placed).sum(dtype=jnp.int32)
+    return (cbl._replace(store=st, v_deg=cbl.v_deg + c_placed,
+                         v_level=cbl.v_level + nb_got,
+                         v_head=v_head, v_tail=v_tail),
+            dropped)
+
+
+@jax.jit
+def batch_update_stats(cbl: CBList, src: jax.Array, dst: jax.Array,
+                       w: Optional[jax.Array] = None,
+                       op: Optional[jax.Array] = None
+                       ) -> Tuple[CBList, UpdateStats]:
+    """:func:`batch_update` + per-batch :class:`UpdateStats` accounting.
+
+    ``stats.dropped_edges > 0`` means the free stack ran out mid-batch;
+    the returned CBList is still consistent (it simply lacks the dropped
+    edges) — grow capacity and re-apply the batch to the *pre-update* CBList
+    for loss-free semantics (pure updates make the retry exact).
+    """
+    if w is None:
+        w = jnp.ones(src.shape, jnp.float32)
+    if op is None:
+        op = jnp.full(src.shape, INSERT, jnp.int32)
+    cbl, n_del = _apply_deletes(cbl, src, dst, op == DELETE)
+    cbl, dropped = _apply_inserts(cbl, src, dst, w, op == INSERT)
+    n_ins = (op == INSERT).sum(dtype=jnp.int32) - dropped
+    return cbl, UpdateStats(dropped_edges=dropped, applied_inserts=n_ins,
+                            applied_deletes=n_del)
 
 
 @jax.jit
@@ -218,13 +275,12 @@ def batch_update(cbl: CBList, src: jax.Array, dst: jax.Array,
     edge replaces it.  Inserts of already-present (and not same-batch
     deleted) edges create parallel edges — use :func:`upsert_edges` for
     replace semantics.
+
+    Inserts past allocator capacity are dropped (consistently — degrees and
+    counts only reflect placed edges); use :func:`batch_update_stats` to
+    observe the ``dropped_edges`` overflow counter and trigger a grow.
     """
-    if w is None:
-        w = jnp.ones(src.shape, jnp.float32)
-    if op is None:
-        op = jnp.full(src.shape, INSERT, jnp.int32)
-    cbl = _apply_deletes(cbl, src, dst, op == DELETE)
-    cbl = _apply_inserts(cbl, src, dst, w, op == INSERT)
+    cbl, _ = batch_update_stats(cbl, src, dst, w, op)
     return cbl
 
 
@@ -236,8 +292,9 @@ def upsert_edges(cbl: CBList, src, dst, w=None,
         w = jnp.ones(src.shape, jnp.float32)
     if valid is None:
         valid = jnp.ones(src.shape, bool)
-    cbl = _apply_deletes(cbl, src, dst, valid)
-    return _apply_inserts(cbl, src, dst, w, valid)
+    cbl, _ = _apply_deletes(cbl, src, dst, valid)
+    cbl, _ = _apply_inserts(cbl, src, dst, w, valid)
+    return cbl
 
 
 @jax.jit

@@ -1,5 +1,6 @@
 """Graph analytics + sampling on the CBList engine."""
-from repro.graph.algorithms import (bfs, connected_components,
-                                    incremental_pagerank, label_propagation,
+from repro.graph.algorithms import (bfs, connected_components, incremental_bfs,
+                                    incremental_cc, incremental_pagerank,
+                                    incremental_sssp, label_propagation,
                                     pagerank, sssp, triangle_count)
 from repro.graph.sampler import SampledGraph, sample_subgraph

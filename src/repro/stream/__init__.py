@@ -1,0 +1,14 @@
+"""repro.stream — versioned dynamic-graph serving over CBList.
+
+Update log (admission + coalescing + backpressure), epoch-versioned
+snapshots, maintenance scheduling (compact / rebuild / grow), and
+incremental analytics behind one :class:`GraphService` facade.
+"""
+from repro.stream.log import (LogReceipt, UpdateLog, append, drain, log_pending,
+                              make_log)
+from repro.stream.maintenance import (MaintenanceAction, MaintenancePolicy,
+                                      apply_action, chain_overlap_fraction,
+                                      decide)
+from repro.stream.service import (FlushReport, GraphService, ServiceStats)
+from repro.stream.snapshot import (Snapshot, advance, query_degrees,
+                                   query_edges, sample_khop, snapshot_of)

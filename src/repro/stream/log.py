@@ -1,0 +1,151 @@
+"""Edge-update log: a fixed-capacity, jit-friendly ring buffer.
+
+The serving layer's write path (paper §6.1: update tasks are classified
+*before* they touch storage).  Writers append (src, dst, w, op) records;
+the flush path drains them in arrival order into one BatchUpdate.  Three
+admission-time mechanisms:
+
+  * **coalescing** — within an appended batch only the *last* op per
+    (src, dst) key survives: insert-then-delete cancels to a delete (a nop
+    when the edge never existed), delete-then-insert collapses to an upsert.
+    This is the paper's task classification done at admission, so the flush
+    batch carries no intra-batch conflicts.
+  * **high-watermark backpressure** — a batch that would push the pending
+    count past ``high_watermark * capacity`` is rejected whole (the receipt
+    says so); the caller flushes and retries.  Rejection is all-or-nothing
+    so a batch is never torn across flush epochs.
+  * **fixed shapes** — capacity is static; append/drain are pure scatter /
+    gather over the ring, safe inside jit.
+
+Sequence numbers are absolute (monotone ``head``/``tail`` counters); the
+snapshot layer records ``head`` at flush time as its applied watermark.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blockstore import PAD
+from repro.core.updates import INSERT, NOP
+
+
+class UpdateLog(NamedTuple):
+    src: jax.Array    # i32[C] ring storage
+    dst: jax.Array    # i32[C]
+    w: jax.Array      # f32[C]
+    op: jax.Array     # i32[C]  (+1 insert / -1 delete; NOP never stored)
+    head: jax.Array   # i32[]  absolute seq of the oldest pending record
+    tail: jax.Array   # i32[]  absolute seq of the next append slot
+
+    @property
+    def capacity(self) -> int:
+        return self.src.shape[0]
+
+
+class LogReceipt(NamedTuple):
+    """What :func:`append` did with the offered batch."""
+    admitted: jax.Array   # bool[]  whole batch accepted?
+    appended: jax.Array   # i32[]   records written (post-coalescing)
+    coalesced: jax.Array  # i32[]   records cancelled at admission
+    pending: jax.Array    # i32[]   records waiting in the log afterwards
+
+
+def make_log(capacity: int) -> UpdateLog:
+    return UpdateLog(
+        src=jnp.zeros((capacity,), jnp.int32),
+        dst=jnp.zeros((capacity,), jnp.int32),
+        w=jnp.zeros((capacity,), jnp.float32),
+        op=jnp.full((capacity,), NOP, jnp.int32),
+        head=jnp.asarray(0, jnp.int32),
+        tail=jnp.asarray(0, jnp.int32),
+    )
+
+
+def log_pending(log: UpdateLog) -> jax.Array:
+    return log.tail - log.head
+
+
+def _coalesce_mask(src: jax.Array, dst: jax.Array, valid: jax.Array
+                   ) -> jax.Array:
+    """Keep only the LAST occurrence of each (src, dst) among valid entries.
+
+    Later ops supersede earlier ones on the same key — the net effect of any
+    in-batch op sequence is its final op (the flush path upserts, so a final
+    insert replaces rather than duplicates).
+    """
+    U = src.shape[0]
+    idx = jnp.arange(U, dtype=jnp.int32)
+    s_key = jnp.where(valid, src, PAD)
+    d_key = jnp.where(valid, dst, PAD)
+    order = jnp.lexsort((idx, d_key, s_key))     # stable by arrival within key
+    ss, dd = s_key[order], d_key[order]
+    is_last = jnp.concatenate([(ss[:-1] != ss[1:]) | (dd[:-1] != dd[1:]),
+                               jnp.ones((1,), bool)])
+    keep = jnp.zeros((U,), bool).at[order].set(is_last)
+    return keep & valid
+
+
+@jax.jit
+def append(log: UpdateLog, src: jax.Array, dst: jax.Array,
+           w: Optional[jax.Array] = None, op: Optional[jax.Array] = None,
+           valid: Optional[jax.Array] = None,
+           high_watermark: float = 1.0) -> Tuple[UpdateLog, LogReceipt]:
+    """Admit a batch into the log (coalesced, watermark-gated, all-or-nothing)."""
+    C = log.capacity
+    if w is None:
+        w = jnp.ones(src.shape, jnp.float32)
+    if op is None:
+        op = jnp.full(src.shape, INSERT, jnp.int32)
+    if valid is None:
+        valid = jnp.ones(src.shape, bool)
+    valid = valid & (op != NOP)
+
+    keep = _coalesce_mask(src, dst, valid)
+    n = keep.sum(dtype=jnp.int32)
+    coalesced = valid.sum(dtype=jnp.int32) - n
+
+    pending0 = log.tail - log.head
+    limit = jnp.asarray(high_watermark * C, jnp.int32)
+    admitted = pending0 + n <= jnp.minimum(limit, C)
+
+    # ring positions for kept entries, in arrival order
+    rank = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    slot = (log.tail + rank) % C
+    slot = jnp.where(keep & admitted, slot, C)           # others dropped
+    new = log._replace(
+        src=log.src.at[slot].set(src, mode="drop"),
+        dst=log.dst.at[slot].set(dst, mode="drop"),
+        w=log.w.at[slot].set(w, mode="drop"),
+        op=log.op.at[slot].set(op, mode="drop"),
+        tail=log.tail + jnp.where(admitted, n, 0),
+    )
+    receipt = LogReceipt(admitted=admitted,
+                         appended=jnp.where(admitted, n, 0),
+                         coalesced=coalesced,
+                         pending=new.tail - new.head)
+    return new, receipt
+
+
+@jax.jit
+def drain(log: UpdateLog) -> Tuple[UpdateLog, Tuple[jax.Array, jax.Array,
+                                                    jax.Array, jax.Array,
+                                                    jax.Array]]:
+    """Pop every pending record in arrival (FIFO) order.
+
+    Returns ``(log', (src, dst, w, op, valid))`` — capacity-sized arrays,
+    ``valid`` marking the live prefix.  Invalid lanes are NOP so they are
+    inert even if fed to BatchUpdate unmasked.
+    """
+    C = log.capacity
+    k = jnp.arange(C, dtype=jnp.int32)
+    n = log.tail - log.head
+    pos = (log.head + k) % C
+    live = k < n
+    out = (jnp.where(live, log.src[pos], 0),
+           jnp.where(live, log.dst[pos], 0),
+           jnp.where(live, log.w[pos], 0.0),
+           jnp.where(live, log.op[pos], NOP),
+           live)
+    return log._replace(head=log.tail), out

@@ -1,0 +1,132 @@
+"""Maintenance policy engine: when to compact, rebuild, or grow storage.
+
+LSMGraph-style explicit maintenance over the CBList substrate.  Incremental
+inserts are deliberately cheap (tail-append, BAL-style) and pay for it in
+three measurable ways; each statistic has a dedicated repair action:
+
+  ===========================  ============================  ================
+  statistic (watched)          degradation                   action
+  ===========================  ============================  ================
+  ``gtchain_contiguity``       chain-adjacent blocks no      ``compact``
+                               longer physically adjacent    (permute blocks)
+  chain-overlap fraction       tail blocks range-overlap     ``rebuild``
+                               earlier ones -> fence          (re-bulk-load)
+                               filters degrade to scans
+  free-stack headroom          allocator near exhaustion     ``grow``
+                               -> inserts would drop          (double blocks)
+  vertex-capacity headroom     logical ids near table end    ``grow``
+  ===========================  ============================  ================
+
+The decision runs host-side between jitted steps (it reads concrete
+statistics, like :func:`repro.core.tuner.choose_plan`); the actions are
+pure CBList -> CBList transforms.  Priority: grow > rebuild > compact —
+capacity loss is correctness-adjacent (dropped edges), fragmentation is
+merely performance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blockstore as bs
+from repro.core.blockstore import NULL
+from repro.core.cblist import CBList, block_fences, compact_cbl, grow, rebuild
+
+
+@dataclasses.dataclass(frozen=True)
+class MaintenancePolicy:
+    contiguity_floor: float = 0.85    # P_h below this -> compact
+    overlap_ceiling: float = 0.25     # chain-overlap fraction above -> rebuild
+    headroom_floor: float = 0.10      # free-block fraction below -> grow
+    vertex_headroom_floor: float = 0.05  # spare vertex-id fraction below -> grow
+    grow_factor: int = 2              # capacity doubling per grow
+    max_edges_hint: Optional[int] = None  # rebuild extraction bound
+                                          # (default: num_blocks * block_width)
+
+
+class MaintenanceAction(NamedTuple):
+    kind: str                 # "none" | "compact" | "rebuild" | "grow"
+    reason: str               # human-readable trigger description
+    num_blocks: int = 0       # grow target (0 = unchanged)
+    vertex_capacity: int = 0  # grow target (0 = unchanged)
+
+
+@jax.jit
+def chain_overlap_fraction(cbl: CBList) -> jax.Array:
+    """Fraction of chain-consecutive block pairs whose key ranges overlap.
+
+    Incremental tail appends leave the last block of a chain range-
+    overlapping its predecessors (DESIGN.md §7), which turns fence-filtered
+    chain queries into full chain scans.  Measured over GTChain order:
+    consecutive live blocks of the same owner with ``lo[next] <= hi[prev]``.
+    """
+    st = cbl.store
+    order = bs.gtchain_order(st)
+    owner_o = st.owner[order]
+    lo, hi = block_fences(st)
+    lo_o, hi_o = lo[order], hi[order]
+    nonempty = (st.count[order] > 0) & (owner_o != NULL)
+    same = (owner_o[1:] == owner_o[:-1]) & nonempty[1:] & nonempty[:-1]
+    ovl = same & (lo_o[1:] <= hi_o[:-1])
+    return ovl.sum() / jnp.maximum(same.sum(), 1)
+
+
+def decide(cbl: CBList, pending_inserts: int = 0,
+           policy: MaintenancePolicy = MaintenancePolicy()
+           ) -> MaintenanceAction:
+    """Pick the maintenance action for the current storage state.
+
+    ``pending_inserts`` is the log's pending insert count — worst case every
+    insert opens a fresh block, so it feeds the headroom projection and lets
+    the scheduler grow *before* a flush would overflow (the reactive path —
+    the ``dropped_edges`` counter — still catches pathological batches).
+    """
+    st = cbl.store
+    nb = st.num_blocks
+    free = int(bs.free_blocks_left(st))
+    projected_free = free - pending_inserts
+    if projected_free < policy.headroom_floor * nb:
+        target = nb * policy.grow_factor
+        while target - (nb - free) < pending_inserts + policy.headroom_floor * target:
+            target *= policy.grow_factor
+        return MaintenanceAction(
+            kind="grow", num_blocks=target,
+            reason=f"free blocks {free}/{nb} (pending {pending_inserts}) "
+                   f"below headroom floor {policy.headroom_floor:.2f}")
+    nv_cap = cbl.capacity_vertices
+    spare_v = nv_cap - int(cbl.n_vertices)
+    if spare_v < policy.vertex_headroom_floor * nv_cap:
+        return MaintenanceAction(
+            kind="grow", vertex_capacity=nv_cap * policy.grow_factor,
+            reason=f"vertex ids {int(cbl.n_vertices)}/{nv_cap} near capacity")
+    overlap = float(chain_overlap_fraction(cbl))
+    if overlap > policy.overlap_ceiling:
+        return MaintenanceAction(
+            kind="rebuild",
+            reason=f"chain overlap {overlap:.2f} above {policy.overlap_ceiling:.2f}")
+    contiguity = float(bs.gtchain_contiguity(st))
+    if contiguity < policy.contiguity_floor:
+        return MaintenanceAction(
+            kind="compact",
+            reason=f"contiguity {contiguity:.2f} below {policy.contiguity_floor:.2f}")
+    return MaintenanceAction(kind="none", reason="all statistics in band")
+
+
+def apply_action(cbl: CBList, action: MaintenanceAction,
+                 policy: MaintenancePolicy = MaintenancePolicy()) -> CBList:
+    """Execute a scheduled action (pure; 'none' is the identity)."""
+    if action.kind == "none":
+        return cbl
+    if action.kind == "compact":
+        return compact_cbl(cbl)
+    if action.kind == "rebuild":
+        max_edges = policy.max_edges_hint or (cbl.store.num_blocks
+                                              * cbl.store.block_width)
+        return rebuild(cbl, max_edges=max_edges)
+    if action.kind == "grow":
+        return grow(cbl, num_blocks=action.num_blocks or None,
+                    vertex_capacity=action.vertex_capacity or None)
+    raise ValueError(f"unknown maintenance action {action.kind!r}")

@@ -1,0 +1,328 @@
+"""GraphService — the versioned dynamic-graph serving facade.
+
+The paper's headline scenario ("fraud detection on a live transaction
+graph") as an owned subsystem instead of an ad-hoc loop: one object that
+owns update admission, snapshot versioning, maintenance scheduling, and
+incremental analytics over a CBList.
+
+    service = GraphService.from_coo(src, dst, w, num_vertices=nv)
+    service.apply(us, ud, uw, op)          # -> update log (coalesced)
+    service.flush()                        # -> new snapshot epoch
+    found, w = service.query_edges(qs, qd) # consistent snapshot reads
+    ranks = service.analytics("pagerank")  # warm-started incrementally
+
+Division of labor (host orchestration / device compute, the same split as
+:func:`repro.core.tuner.choose_plan`):
+
+  * the write path appends to the :mod:`~repro.stream.log` ring buffer —
+    jitted, coalesced, watermark-gated;
+  * ``flush`` drains the log, re-coalesces across append batches (the log
+    is FIFO, so the *last* op per key wins), frames the result as
+    delete-phase + insert-phase records (upsert semantics: no parallel
+    edges), and applies one BatchUpdate;
+  * the ``dropped_edges`` overflow counter triggers capacity grow + retry
+    on the pre-update CBList — updates are pure, so the retry is exact and
+    the service never loses an admitted edge;
+  * the :mod:`~repro.stream.maintenance` policy then schedules
+    compact/rebuild/grow from the storage statistics;
+  * readers hold :class:`~repro.stream.snapshot.Snapshot` versions; the
+    analytics cache warm-starts the ``incremental_*`` drivers from the last
+    fixpoint and routes engine sweeps through the tuner's per-task plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cblist import CBList, build_from_coo
+from repro.core.tuner import SystemProbe, choose_engine_impl, choose_plan
+from repro.core.updates import (DELETE, INSERT, NOP, batch_update_stats,
+                                read_edges)
+from repro.graph import algorithms as alg
+from repro.stream import log as ulog
+from repro.stream import maintenance as maint
+from repro.stream import snapshot as snap
+from repro.stream.log import LogReceipt, UpdateLog
+from repro.stream.maintenance import MaintenanceAction, MaintenancePolicy
+from repro.stream.snapshot import Snapshot
+
+MAX_GROW_RETRIES = 6
+
+# neutral warm-start values for vertices added by a capacity grow: each is
+# the "unknown" element of the matching incremental driver's lattice
+_WARM_FILL = {"pagerank": 0.0, "bfs": -1, "sssp": jnp.inf, "cc": -1}
+
+
+def _pad_warm(warm: jax.Array, capacity: int, name: str) -> jax.Array:
+    """Pad a cached fixpoint to the post-grow vertex capacity."""
+    if warm.shape[0] >= capacity:
+        return warm
+    pad = jnp.full((capacity - warm.shape[0],), _WARM_FILL[name], warm.dtype)
+    return jnp.concatenate([warm, pad])
+
+
+class FlushReport(NamedTuple):
+    epoch: int                    # snapshot epoch after the flush
+    watermark: int                # log sequence applied through
+    applied_inserts: int
+    applied_deletes: int
+    grow_retries: int             # reactive grows forced by dropped_edges
+    maintenance: MaintenanceAction
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    admitted: int = 0             # records admitted into the log
+    coalesced: int = 0            # records cancelled at admission
+    rejected_batches: int = 0     # whole-batch backpressure rejections
+    flushes: int = 0
+    applied_inserts: int = 0
+    applied_deletes: int = 0
+    dropped_retries: int = 0      # overflow-triggered grow+retry cycles
+    grows: int = 0
+    compacts: int = 0
+    rebuilds: int = 0
+
+
+class GraphService:
+    """Facade over log + snapshot + maintenance + incremental analytics.
+
+    Host-side orchestrator: every decision that needs concrete statistics
+    (admission retry, grow, maintenance, tuner plan) runs between jitted
+    steps; all graph state transforms are pure jitted functions.
+    """
+
+    def __init__(self, cbl: CBList, *, log_capacity: int = 4096,
+                 high_watermark: float = 0.75,
+                 policy: MaintenancePolicy = MaintenancePolicy(),
+                 probe: Optional[SystemProbe] = None,
+                 auto_flush: bool = True):
+        self._snap = snap.snapshot_of(cbl)
+        self._log: UpdateLog = ulog.make_log(log_capacity)
+        self._high_watermark = float(high_watermark)
+        self._policy = policy
+        self._probe = probe
+        self._auto_flush = auto_flush
+        self.stats = ServiceStats()
+        # analytics cache: (name, source) -> (epoch, delete_count, kw, result)
+        self._cache: Dict[Tuple, Tuple[int, int, dict, jax.Array]] = {}
+        self._deletes_applied = 0     # net topology removals (CC split signal)
+
+    @classmethod
+    def from_coo(cls, src, dst, w=None, *, num_vertices: int,
+                 num_blocks: Optional[int] = None, block_width: int = 32,
+                 **kw) -> "GraphService":
+        if num_blocks is None:
+            num_blocks = max(64, 2 * len(src) // block_width + num_vertices // 4)
+        cbl = build_from_coo(jnp.asarray(src), jnp.asarray(dst),
+                             None if w is None else jnp.asarray(w),
+                             num_vertices=num_vertices, num_blocks=num_blocks,
+                             block_width=block_width)
+        return cls(cbl, **kw)
+
+    # ---- versioned read path ---------------------------------------------
+
+    @property
+    def snapshot(self) -> Snapshot:
+        """The current served version (pin it for multi-query consistency)."""
+        return self._snap
+
+    @property
+    def epoch(self) -> int:
+        return int(self._snap.epoch)
+
+    @property
+    def pending_updates(self) -> int:
+        """Admitted records not yet visible to readers (staleness in ops)."""
+        return int(ulog.log_pending(self._log))
+
+    def query_edges(self, qsrc, qdst):
+        return snap.query_edges(self._snap, jnp.asarray(qsrc, jnp.int32),
+                                jnp.asarray(qdst, jnp.int32))
+
+    def query_degrees(self, verts):
+        return snap.query_degrees(self._snap, jnp.asarray(verts, jnp.int32))
+
+    def sample_khop(self, seeds, key, fanout: Sequence[int] = (15, 10)):
+        return snap.sample_khop(self._snap, jnp.asarray(seeds, jnp.int32),
+                                key, fanout)
+
+    # ---- write path -------------------------------------------------------
+
+    def apply(self, src, dst, w=None, op=None) -> LogReceipt:
+        """Admit an update batch into the log (no storage mutation yet).
+
+        On watermark rejection the service flushes and retries once (when
+        ``auto_flush``); a batch larger than the whole log raises.
+        """
+        args = (jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32),
+                None if w is None else jnp.asarray(w, jnp.float32),
+                None if op is None else jnp.asarray(op, jnp.int32))
+        self._log, receipt = ulog.append(self._log, *args,
+                                         high_watermark=self._high_watermark)
+        if not bool(receipt.admitted):
+            self.stats.rejected_batches += 1
+            if not self._auto_flush:
+                return receipt
+            self.flush()
+            self._log, receipt = ulog.append(
+                self._log, *args, high_watermark=self._high_watermark)
+            if not bool(receipt.admitted):
+                raise ValueError(
+                    f"update batch of {args[0].shape[0]} records cannot fit "
+                    f"an empty log of capacity {self._log.capacity} at "
+                    f"watermark {self._high_watermark}")
+        self.stats.admitted += int(receipt.appended)
+        self.stats.coalesced += int(receipt.coalesced)
+        return receipt
+
+    def flush(self) -> FlushReport:
+        """Drain the log into storage and publish a new snapshot epoch.
+
+        Loss-free: the ``dropped_edges`` overflow counter triggers a
+        capacity grow and an exact retry on the pre-update CBList.
+        """
+        self._log, (s, d, w, op, valid) = ulog.drain(self._log)
+        watermark = int(self._log.head)
+        cbl = self._snap.cbl
+
+        # cross-append coalescing: the drained stream is FIFO, the last op
+        # per key is the net effect (append only coalesces within one batch)
+        keep = ulog._coalesce_mask(s, d, valid)
+        n_ins = int((keep & (op == INSERT)).sum())
+
+        # net topology removals = final-op DELETE keys that currently exist.
+        # The upsert framing below also "deletes" every re-inserted key, so
+        # UpdateStats.applied_deletes over-counts for the CC split signal —
+        # weight refreshes must not force cold CC restarts.
+        del_keys = keep & (op == DELETE)
+        if bool(del_keys.any()):
+            found, _ = read_edges(cbl, s, d)
+            net_deletes = int((del_keys & found).sum())
+        else:
+            net_deletes = 0
+
+        # proactive grow: worst case every pending insert opens a block
+        action = maint.decide(cbl, pending_inserts=n_ins, policy=self._policy)
+        if action.kind == "grow":
+            cbl = maint.apply_action(cbl, action, self._policy)
+            self.stats.grows += 1
+
+        # upsert framing: delete phase clears every kept key (nop when
+        # absent), insert phase re-adds the final-insert keys — replace
+        # semantics, no parallel edges, one BatchUpdate.
+        src2 = jnp.concatenate([s, s])
+        dst2 = jnp.concatenate([d, d])
+        w2 = jnp.concatenate([w, w])
+        op2 = jnp.concatenate([jnp.where(keep, DELETE, NOP),
+                               jnp.where(keep & (op == INSERT), INSERT, NOP)])
+
+        grow_retries = 0
+        while True:
+            new_cbl, ustats = batch_update_stats(cbl, src2, dst2, w2, op2)
+            dropped = int(ustats.dropped_edges)
+            if dropped == 0:
+                break
+            if grow_retries >= MAX_GROW_RETRIES:
+                raise RuntimeError(
+                    f"flush still dropping {dropped} edges after "
+                    f"{grow_retries} capacity doublings")
+            # retry the whole batch on the pre-update cbl: updates are pure,
+            # so this is exact (no partial application to reconcile)
+            cbl = maint.apply_action(
+                cbl, MaintenanceAction(
+                    kind="grow", reason=f"overflow: {dropped} dropped",
+                    num_blocks=cbl.store.num_blocks * self._policy.grow_factor),
+                self._policy)
+            grow_retries += 1
+            self.stats.grows += 1
+        cbl = new_cbl
+
+        # post-apply maintenance (fragmentation repair)
+        action = maint.decide(cbl, pending_inserts=0, policy=self._policy)
+        if action.kind in ("compact", "rebuild", "grow"):
+            cbl = maint.apply_action(cbl, action, self._policy)
+            if action.kind == "compact":
+                self.stats.compacts += 1
+            elif action.kind == "rebuild":
+                self.stats.rebuilds += 1
+            else:
+                self.stats.grows += 1
+
+        self._snap = snap.advance(self._snap, cbl, watermark)
+        self.stats.flushes += 1
+        self.stats.applied_inserts += int(ustats.applied_inserts)
+        self.stats.applied_deletes += net_deletes
+        self.stats.dropped_retries += grow_retries
+        self._deletes_applied += net_deletes
+        return FlushReport(epoch=int(self._snap.epoch), watermark=watermark,
+                           applied_inserts=int(ustats.applied_inserts),
+                           applied_deletes=net_deletes,
+                           grow_retries=grow_retries, maintenance=action)
+
+    # ---- incremental analytics -------------------------------------------
+
+    def analytics(self, name: str, source: Optional[int] = None,
+                  **kw) -> jax.Array:
+        """Run (or incrementally refresh) an analytics workload.
+
+        ``name``: "pagerank" | "bfs" | "sssp" | "cc".  Results are cached
+        per (name, source) with the epoch they were computed at; a later
+        call on a newer epoch warm-starts the matching ``incremental_*``
+        driver from the cached fixpoint.  The engine ``impl`` comes from the
+        tuner's per-task plan ("scan_all" for dense sweeps, "frontier" for
+        BFS/SSSP).
+        """
+        cbl = self._snap.cbl
+        epoch = int(self._snap.epoch)
+        if name in ("bfs", "sssp"):
+            source = 0 if source is None else int(source)  # one cache entry
+        key = (name, source)
+        cached = self._cache.get(key)
+        # a same-epoch hit must also have been computed with the same
+        # parameters — a cheap preview must not shadow an accurate request
+        if cached is not None and cached[0] == epoch and cached[2] == kw:
+            return cached[3]
+
+        task = "frontier" if name in ("bfs", "sssp") else "scan_all"
+        impl = choose_engine_impl(cbl, task, self._probe)
+        warm = cached[3] if cached is not None else None
+        if warm is not None:
+            warm = _pad_warm(warm, cbl.capacity_vertices, name)
+
+        if name == "pagerank":
+            if warm is not None:
+                out = alg.incremental_pagerank(cbl, warm, impl=impl, **kw)
+            else:
+                out = alg.pagerank(cbl, impl=impl, **kw)
+        elif name == "bfs":
+            src_v = jnp.int32(source)
+            if warm is not None:
+                out = alg.incremental_bfs(cbl, src_v, warm, impl=impl, **kw)
+            else:
+                out = alg.bfs(cbl, src_v, impl=impl, **kw)
+        elif name == "sssp":
+            src_v = jnp.int32(source)
+            if warm is not None:
+                out = alg.incremental_sssp(cbl, src_v, warm, impl=impl, **kw)
+            else:
+                out = alg.sssp(cbl, src_v, impl=impl, **kw)
+        elif name == "cc":
+            if warm is not None:
+                had_deletes = self._deletes_applied > cached[1]
+                out = alg.incremental_cc(cbl, warm, jnp.bool_(had_deletes),
+                                         impl=impl, **kw)
+            else:
+                out = alg.connected_components(cbl, impl=impl, **kw)
+        else:
+            raise ValueError(f"unknown analytics workload {name!r}")
+
+        self._cache[key] = (epoch, self._deletes_applied, dict(kw), out)
+        return out
+
+    def plan(self, task: str = "scan_all"):
+        """The tuner's current execution plan for a task (introspection)."""
+        return choose_plan(self._snap.cbl, task, self._probe)

@@ -64,10 +64,31 @@ def test_lp_runs(nx_graph):
     assert lp.shape == (NV,)
 
 
-def test_triangle_probe(nx_graph):
+def test_triangle_count_vs_networkx(nx_graph):
     NV, G, cbl = nx_graph
     tc = int(triangle_count(cbl, 1024))
-    assert tc == sum(1 for u, v in G.edges() if G.has_edge(v, u))
+    und = nx.Graph(G)          # undirected support, reciprocal pairs merged
+    assert tc == sum(nx.triangles(und).values()) // 3
+
+
+def test_triangle_count_k4():
+    # K4 stored with both edge directions: 4 triangles, not the 6 reciprocal
+    # pairs the old edge-probe "count" returned.
+    edges = [(u, v) for u in range(4) for v in range(4) if u != v]
+    src = jnp.array([e[0] for e in edges], jnp.int32)
+    dst = jnp.array([e[1] for e in edges], jnp.int32)
+    cbl = build_from_coo(src, dst, None, num_vertices=4, num_blocks=16,
+                         block_width=4)
+    assert int(triangle_count(cbl)) == 4
+
+
+def test_triangle_count_one_direction_and_self_loop():
+    # triangle stored one direction only + a self loop: still exactly 1
+    src = jnp.array([0, 1, 2, 0], jnp.int32)
+    dst = jnp.array([1, 2, 0, 0], jnp.int32)
+    cbl = build_from_coo(src, dst, None, num_vertices=3, num_blocks=8,
+                         block_width=4)
+    assert int(triangle_count(cbl)) == 1
 
 
 def test_sampler_edges_exist(nx_graph):

@@ -1,0 +1,424 @@
+"""repro.stream serving subsystem: update log, snapshots, maintenance,
+GraphService end-to-end (the ISSUE 2 acceptance criteria live here)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DELETE, INSERT, NOP, NULL, PAD, batch_update,
+                        batch_update_stats, build_from_coo, compact_cbl,
+                        free_blocks_left, grow, gtchain_contiguity,
+                        read_edges, to_coo)
+from repro.data import rmat_edges, update_stream
+from repro.graph import (bfs, connected_components, incremental_bfs,
+                         incremental_cc, incremental_sssp, pagerank, sssp)
+from repro.stream import (GraphService, MaintenancePolicy, append,
+                          chain_overlap_fraction, decide, drain, log_pending,
+                          make_log, snapshot_of)
+from repro.stream import snapshot as snapmod
+
+
+# ---------------------------------------------------------------- update log
+
+def test_log_append_drain_fifo():
+    log = make_log(16)
+    log, r1 = append(log, jnp.array([1, 2], jnp.int32),
+                     jnp.array([10, 20], jnp.int32))
+    log, r2 = append(log, jnp.array([3], jnp.int32),
+                     jnp.array([30], jnp.int32),
+                     op=jnp.array([DELETE], jnp.int32))
+    assert bool(r1.admitted) and bool(r2.admitted)
+    assert int(log_pending(log)) == 3
+    log, (s, d, w, op, valid) = drain(log)
+    n = int(valid.sum())
+    assert n == 3 and int(log_pending(log)) == 0
+    assert np.array_equal(np.array(s)[:3], [1, 2, 3])
+    assert np.array_equal(np.array(d)[:3], [10, 20, 30])
+    assert np.array_equal(np.array(op)[:3], [INSERT, INSERT, DELETE])
+    # invalid tail lanes are inert NOPs
+    assert np.all(np.array(op)[3:] == NOP)
+
+
+def test_log_coalesce_last_op_wins():
+    log = make_log(16)
+    # insert then delete of the same key cancels to the delete; the delete
+    # later re-inserted key keeps only the final insert
+    src = jnp.array([0, 0, 5, 5], jnp.int32)
+    dst = jnp.array([1, 1, 6, 6], jnp.int32)
+    op = jnp.array([INSERT, DELETE, DELETE, INSERT], jnp.int32)
+    log, r = append(log, src, dst, op=op)
+    assert int(r.appended) == 2 and int(r.coalesced) == 2
+    log, (s, d, _, o, valid) = drain(log)
+    got = {(int(a), int(b)): int(c)
+           for a, b, c, v in zip(np.array(s), np.array(d), np.array(o),
+                                 np.array(valid)) if v}
+    assert got == {(0, 1): DELETE, (5, 6): INSERT}
+
+
+def test_log_backpressure_all_or_nothing():
+    log = make_log(8)
+    log, r = append(log, jnp.arange(3, dtype=jnp.int32),
+                    jnp.arange(3, dtype=jnp.int32), high_watermark=0.5)
+    assert bool(r.admitted) and int(r.pending) == 3
+    # 3 pending + 3 new > 4 = floor(0.5 * 8): rejected whole, log untouched
+    log, r = append(log, 100 + jnp.arange(3, dtype=jnp.int32),
+                    jnp.arange(3, dtype=jnp.int32), high_watermark=0.5)
+    assert not bool(r.admitted)
+    assert int(r.appended) == 0 and int(log_pending(log)) == 3
+
+
+def test_log_ring_wraparound():
+    log = make_log(4)
+    for round_ in range(5):       # 10 records through a 4-slot ring
+        log, r = append(log, jnp.array([round_, round_], jnp.int32),
+                        jnp.array([1, 2], jnp.int32))
+        assert bool(r.admitted)
+        log, (s, d, _, _, valid) = drain(log)
+        assert int(valid.sum()) == 2
+        assert np.array_equal(np.array(s)[:2], [round_, round_])
+        assert np.array_equal(np.array(d)[:2], [1, 2])
+
+
+# ------------------------------------------------- allocator overflow + grow
+
+@pytest.fixture
+def tiny_cbl():
+    return build_from_coo(jnp.array([0, 0, 1], jnp.int32),
+                          jnp.array([1, 2, 0], jnp.int32), None,
+                          num_vertices=4, num_blocks=4, block_width=4)
+
+
+def test_batch_update_stats_surfaces_dropped(tiny_cbl):
+    # 14 inserts on one vertex need 4 blocks; only 2 are free -> 8 placed
+    src = jnp.full((14,), 2, jnp.int32)
+    dst = 10 + jnp.arange(14, dtype=jnp.int32)
+    cbl, st = batch_update_stats(tiny_cbl, src, dst)
+    assert int(st.dropped_edges) == 6
+    assert int(st.applied_inserts) == 8
+    assert int(cbl.v_deg[2]) == 8            # degree counts only placed edges
+    # structure stays consistent: counts == live lanes, chain == level, tail ok
+    key_live = (np.array(cbl.store.keys) != PAD).sum(axis=1)
+    assert np.array_equal(key_live, np.array(cbl.store.count))
+    nxt, cur, n, last = np.array(cbl.store.nxt), int(cbl.v_head[2]), 0, NULL
+    while cur != NULL:
+        last, n, cur = cur, n + 1, nxt[cur]
+    assert n == int(cbl.v_level[2]) and last == int(cbl.v_tail[2])
+    # pre-existing edges in the last physical block were NOT corrupted
+    f, _ = read_edges(cbl, jnp.array([0, 0, 1], jnp.int32),
+                      jnp.array([1, 2, 0], jnp.int32))
+    assert bool(jnp.all(f))
+
+
+def test_grow_then_retry_is_loss_free(tiny_cbl):
+    src = jnp.full((14,), 2, jnp.int32)
+    dst = 10 + jnp.arange(14, dtype=jnp.int32)
+    grown = grow(tiny_cbl, num_blocks=16, vertex_capacity=8)
+    # original graph survives the grow untouched
+    s0, d0, _, v0 = to_coo(grown, 64)
+    assert {(int(a), int(b)) for a, b, v in
+            zip(np.array(s0), np.array(d0), np.array(v0)) if v} \
+        == {(0, 1), (0, 2), (1, 0)}
+    cbl, st = batch_update_stats(grown, src, dst)
+    assert int(st.dropped_edges) == 0
+    f, _ = read_edges(cbl, src, dst)
+    assert bool(jnp.all(f))
+    # grown vertex table usable: insert on a fresh vertex id
+    cbl2, st2 = batch_update_stats(cbl, jnp.array([6], jnp.int32),
+                                   jnp.array([0], jnp.int32))
+    assert int(st2.dropped_edges) == 0 and int(cbl2.v_deg[6]) == 1
+
+
+def test_compact_cbl_remaps_chain_pointers():
+    nv, ne = 40, 200
+    s, d = rmat_edges(nv, ne, seed=5)
+    cbl = build_from_coo(jnp.asarray(s), jnp.asarray(d), None,
+                         num_vertices=nv, num_blocks=256, block_width=4)
+    # fragment physical order with a few update rounds
+    rng = np.random.default_rng(0)
+    for k in range(3):
+        us = jnp.asarray(rng.integers(0, nv, 40).astype(np.int32))
+        ud = jnp.asarray(100 * (k + 1) % nv + rng.integers(0, nv, 40)
+                         .astype(np.int32)) % nv
+        cbl = batch_update(cbl, us, ud)
+    before = {(int(a), int(b)) for a, b, v in zip(*[np.array(x) for x in
+              to_coo(cbl, 1024)][:2], np.array(to_coo(cbl, 1024)[3])) if v}
+    cc = compact_cbl(cbl)
+    assert float(gtchain_contiguity(cc.store)) == 1.0
+    s2, d2, _, v2 = to_coo(cc, 1024)
+    after = {(int(a), int(b)) for a, b, v in
+             zip(np.array(s2), np.array(d2), np.array(v2)) if v}
+    assert after == before
+    # v_head/v_tail were remapped: chain walk still visits v_level blocks
+    nxt = np.array(cc.store.nxt)
+    for v in range(nv):
+        cur, n, last = int(cc.v_head[v]), 0, NULL
+        while cur != NULL:
+            last, n, cur = cur, n + 1, nxt[cur]
+        assert n == int(cc.v_level[v])
+        if n:
+            assert last == int(cc.v_tail[v])
+
+
+# ------------------------------------------------------- maintenance policy
+
+def test_decide_prioritizes_grow_then_rebuild_then_compact(tiny_cbl):
+    # free stack nearly empty -> grow wins
+    act = decide(tiny_cbl, pending_inserts=10)
+    assert act.kind == "grow" and act.num_blocks >= 8
+    # plenty of room, perfect layout -> none
+    roomy = grow(tiny_cbl, num_blocks=64, vertex_capacity=16)
+    assert decide(roomy).kind == "none"
+    # force overlap: append out-of-range keys to an existing chain
+    frag = batch_update(roomy, jnp.array([0, 0], jnp.int32),
+                        jnp.array([9, 3], jnp.int32))
+    frag = batch_update(frag, jnp.array([0], jnp.int32),
+                        jnp.array([1], jnp.int32) * 0)
+    pol = MaintenancePolicy(overlap_ceiling=0.0, contiguity_floor=0.0)
+    if float(chain_overlap_fraction(frag)) > 0:
+        assert decide(frag, policy=pol).kind == "rebuild"
+
+
+def test_chain_overlap_fraction_zero_after_rebuild(tiny_cbl):
+    roomy = grow(tiny_cbl, num_blocks=64)
+    frag = batch_update(roomy, jnp.zeros((9,), jnp.int32),
+                        jnp.array([9, 8, 7, 6, 5, 3, 11, 12, 13], jnp.int32))
+    from repro.core import rebuild
+    rebuilt = rebuild(frag, max_edges=64)
+    assert float(chain_overlap_fraction(rebuilt)) == 0.0
+
+
+# ------------------------------------------------------------------ snapshots
+
+def test_snapshot_isolation_across_flush():
+    nv = 50
+    s, d = rmat_edges(nv, 300, seed=2)
+    svc = GraphService(build_from_coo(jnp.asarray(s), jnp.asarray(d), None,
+                                      num_vertices=nv, num_blocks=256,
+                                      block_width=8),
+                       log_capacity=128)
+    pinned = svc.snapshot
+    e0 = int(pinned.num_edges)
+    # admitted but unflushed updates are invisible to every reader
+    svc.apply(np.array([7], np.int32), np.array([49], np.int32))
+    assert svc.pending_updates == 1
+    assert int(svc.snapshot.epoch) == 0
+    found, _ = svc.query_edges([7], [49])
+    if (7, 49) not in set(zip(s.tolist(), d.tolist())):
+        assert not bool(found[0])
+    rep = svc.flush()
+    assert rep.epoch == 1 and svc.pending_updates == 0
+    found, _ = svc.query_edges([7], [49])
+    assert bool(found[0])
+    # the pinned pre-flush version still serves the old state
+    pf, _ = snapmod.query_edges(pinned, jnp.array([7], jnp.int32),
+                                jnp.array([49], jnp.int32))
+    if (7, 49) not in set(zip(s.tolist(), d.tolist())):
+        assert not bool(pf[0])
+    assert int(pinned.num_edges) == e0
+    assert int(pinned.epoch) == 0 and int(svc.snapshot.epoch) == 1
+
+
+def test_snapshot_khop_sample_serves_consistent_edges():
+    nv = 60
+    s, d = rmat_edges(nv, 400, seed=3)
+    svc = GraphService(build_from_coo(jnp.asarray(s), jnp.asarray(d), None,
+                                      num_vertices=nv, num_blocks=256,
+                                      block_width=8))
+    sg = svc.sample_khop(np.arange(8, dtype=np.int32), jax.random.PRNGKey(0),
+                         fanout=(4, 3))
+    ss, dd, ok = np.array(sg.src), np.array(sg.dst), np.array(sg.valid)
+    assert ok.sum() > 0
+    f, _ = svc.query_edges(ss[ok], dd[ok])
+    assert bool(jnp.all(f))
+
+
+# ----------------------------------------------------- service end-to-end
+
+def _edge_oracle(initial, batches):
+    """Sequential upsert/delete semantics over the whole stream."""
+    adj = {(int(a), int(b)) for a, b in zip(*initial)}
+    for us, ud, uw, op in batches:
+        for a, b, o in zip(us.tolist(), ud.tolist(), op.tolist()):
+            if o == INSERT:
+                adj.add((a, b))
+            elif o == DELETE:
+                adj.discard((a, b))
+    return adj
+
+
+def test_service_20_batch_acceptance():
+    """ISSUE 2 acceptance: 20 batches with maintenance on, zero edge loss
+    (grow absorbs overflow), final ranks match from-scratch pagerank, and
+    the incremental drivers match their full recomputations."""
+    nv, ne, batch = 200, 1600, 128
+    s, d = rmat_edges(nv, ne, seed=0)
+    svc = GraphService.from_coo(
+        s, d, num_vertices=nv, num_blocks=ne // 8 + nv // 2, block_width=8,
+        log_capacity=512)
+    batches = list(update_stream(nv, (s, d), batch, 20, seed=1))
+    for us, ud, uw, op in batches:
+        svc.apply(us, ud, uw, op)
+        svc.flush()
+    assert svc.stats.flushes >= 20
+    assert svc.stats.grows > 0, "stream sized to force capacity growth"
+
+    # zero edge loss: served graph == sequential oracle over the stream
+    cbl = svc.snapshot.cbl
+    s2, d2, _, v2 = to_coo(cbl, cbl.store.num_blocks * cbl.block_width)
+    got = {(int(a), int(b)) for a, b, v in
+           zip(np.array(s2), np.array(d2), np.array(v2)) if v}
+    assert got == _edge_oracle((s, d), batches)
+
+    # served (incrementally warmed) ranks == from-scratch pagerank @ 1e-4
+    served = np.array(svc.analytics("pagerank", max_iters=100, tol=1e-10))
+    scratch = np.array(pagerank(cbl, max_iters=100, tol=1e-10))
+    np.testing.assert_allclose(served, scratch, atol=1e-4)
+
+
+def test_incremental_drivers_match_full_after_one_batch():
+    nv, ne = 150, 1000
+    s, d = rmat_edges(nv, ne, seed=4)
+    w = (np.random.default_rng(0).random(ne) + 0.1).astype(np.float32)
+    cbl = build_from_coo(jnp.asarray(s), jnp.asarray(d), jnp.asarray(w),
+                         num_vertices=nv, num_blocks=1024, block_width=8)
+    prev_b = bfs(cbl, jnp.int32(0))
+    prev_s = sssp(cbl, jnp.int32(0))
+    prev_c = connected_components(cbl)
+    (us, ud, uw, op), = update_stream(nv, (s, d), 120, 1, seed=9)
+    cbl2 = batch_update(cbl, jnp.asarray(us), jnp.asarray(ud),
+                        jnp.asarray(uw), jnp.asarray(op))
+    assert np.array_equal(np.array(incremental_bfs(cbl2, jnp.int32(0), prev_b)),
+                          np.array(bfs(cbl2, jnp.int32(0))))
+    np.testing.assert_allclose(
+        np.array(incremental_sssp(cbl2, jnp.int32(0), prev_s)),
+        np.array(sssp(cbl2, jnp.int32(0))), atol=1e-5)
+    assert np.array_equal(
+        np.array(incremental_cc(cbl2, prev_c, jnp.bool_(True))),
+        np.array(connected_components(cbl2)))
+
+
+def test_incremental_retraction_beyond_iter_cap():
+    # deleting the first edge of a long path must retract EVERY downstream
+    # distance, even past the relaxation iteration cap (regression: a capped
+    # retraction left stale finite labels the monotone relax cannot undo)
+    n = 100
+    src = jnp.arange(n - 1, dtype=jnp.int32)
+    dst = jnp.arange(1, n, dtype=jnp.int32)
+    cbl = build_from_coo(src, dst, None, num_vertices=n, num_blocks=256,
+                         block_width=4)
+    prev_b = bfs(cbl, jnp.int32(0), max_iters=128)
+    prev_s = sssp(cbl, jnp.int32(0), max_iters=128)
+    cut = batch_update(cbl, jnp.array([0], jnp.int32),
+                       jnp.array([1], jnp.int32), None,
+                       jnp.array([DELETE], jnp.int32))
+    ib = np.array(incremental_bfs(cut, jnp.int32(0), prev_b, max_iters=64))
+    assert np.array_equal(ib, np.array(bfs(cut, jnp.int32(0), max_iters=64)))
+    assert np.all(ib[1:] == -1), "stale reachability after bridge deletion"
+    iss = np.array(incremental_sssp(cut, jnp.int32(0), prev_s, max_iters=64))
+    assert np.all(np.isinf(iss[1:]))
+
+
+def test_analytics_cache_respects_kwargs():
+    nv = 60
+    s, d = rmat_edges(nv, 400, seed=11)
+    svc = GraphService.from_coo(s, d, num_vertices=nv, num_blocks=256,
+                                block_width=8)
+    preview = svc.analytics("pagerank", max_iters=1, tol=1e-12)
+    accurate = svc.analytics("pagerank", max_iters=100, tol=1e-12)
+    assert accurate is not preview
+    np.testing.assert_allclose(
+        np.array(accurate),
+        np.array(pagerank(svc.snapshot.cbl, max_iters=100, tol=1e-12)),
+        atol=1e-6)
+    # bare and explicit source-0 frontier calls share one cache entry
+    assert svc.analytics("bfs") is svc.analytics("bfs", source=0)
+
+
+def test_query_degrees_out_of_range_is_zero():
+    nv = 20
+    s, d = rmat_edges(nv, 80, seed=12)
+    svc = GraphService.from_coo(s, d, num_vertices=nv, num_blocks=128,
+                                block_width=4)
+    deg = np.array(svc.query_degrees(np.array([0, nv - 1, nv + 5, -3],
+                                              np.int32)))
+    ref = np.array(svc.snapshot.cbl.v_deg)
+    assert deg[0] == ref[0] and deg[1] == ref[nv - 1]
+    assert deg[2] == 0 and deg[3] == 0
+
+
+def test_weight_refresh_flush_keeps_cc_warm():
+    # re-upserting existing edges (weight refresh) removes no topology:
+    # applied_deletes must stay 0 so incremental CC keeps its warm start
+    nv = 40
+    s, d = rmat_edges(nv, 200, seed=13)
+    svc = GraphService.from_coo(s, d, num_vertices=nv, num_blocks=256,
+                                block_width=8)
+    svc.analytics("cc")
+    w2 = np.full(len(s), 2.0, np.float32)
+    svc.apply(s, d, w2)                      # same edges, new weights
+    rep = svc.flush()
+    assert rep.applied_deletes == 0
+    assert np.array_equal(np.array(svc.analytics("cc")),
+                          np.array(connected_components(svc.snapshot.cbl)))
+
+
+def test_service_incremental_analytics_match_full(tiny_cbl):
+    nv, ne = 120, 900
+    s, d = rmat_edges(nv, ne, seed=6)
+    svc = GraphService.from_coo(s, d, num_vertices=nv, num_blocks=512,
+                                block_width=8, log_capacity=256)
+    for name, source in (("bfs", 0), ("sssp", 0), ("cc", None),
+                         ("pagerank", None)):
+        svc.analytics(name, source=source)      # populate warm cache
+    (us, ud, uw, op), = update_stream(nv, (s, d), 100, 1, seed=7)
+    svc.apply(us, ud, uw, op)
+    svc.flush()
+    cbl = svc.snapshot.cbl
+    assert np.array_equal(np.array(svc.analytics("bfs", source=0)),
+                          np.array(bfs(cbl, jnp.int32(0))))
+    np.testing.assert_allclose(np.array(svc.analytics("sssp", source=0)),
+                               np.array(sssp(cbl, jnp.int32(0))), atol=1e-5)
+    assert np.array_equal(np.array(svc.analytics("cc")),
+                          np.array(connected_components(cbl)))
+    np.testing.assert_allclose(
+        np.array(svc.analytics("pagerank", max_iters=100, tol=1e-10)),
+        np.array(pagerank(cbl, max_iters=100, tol=1e-10)), atol=1e-5)
+    # same-epoch calls are cache hits (identical object)
+    assert svc.analytics("cc") is svc.analytics("cc")
+
+
+def test_service_reactive_overflow_grow():
+    """With the proactive headroom trigger disabled, the dropped_edges
+    overflow counter alone must grow capacity and lose nothing."""
+    nv = 64
+    s = np.arange(32, dtype=np.int32) % 8
+    d = np.arange(32, dtype=np.int32)
+    svc = GraphService.from_coo(
+        s, d, num_vertices=nv, num_blocks=16, block_width=4,
+        log_capacity=256,
+        policy=MaintenancePolicy(headroom_floor=-1e9,
+                                 vertex_headroom_floor=-1e9,
+                                 overlap_ceiling=2.0, contiguity_floor=-1.0))
+    us = np.repeat(np.arange(16, 48, dtype=np.int32), 4)
+    ud = np.tile(np.arange(4, dtype=np.int32), 32) + 50
+    svc.apply(us, ud)
+    rep = svc.flush()
+    assert rep.grow_retries > 0, "reactive path should have fired"
+    f, _ = svc.query_edges(us, ud)
+    assert bool(jnp.all(f)), "no admitted edge may be lost"
+
+
+def test_service_backpressure_autoflush():
+    nv = 32
+    s, d = rmat_edges(nv, 100, seed=8)
+    svc = GraphService.from_coo(s, d, num_vertices=nv, num_blocks=128,
+                                block_width=4, log_capacity=32,
+                                high_watermark=0.5)
+    for k in range(4):                 # 4 x 10 records through a 16-cap gate
+        us = np.random.default_rng(k).integers(0, nv, 10).astype(np.int32)
+        ud = np.random.default_rng(100 + k).integers(0, nv, 10).astype(np.int32)
+        svc.apply(us, ud)
+    assert svc.stats.rejected_batches > 0
+    assert svc.stats.flushes > 0       # auto-flush absorbed the rejection
+    svc.flush()
+    assert svc.pending_updates == 0
