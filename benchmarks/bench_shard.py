@@ -1,0 +1,100 @@
+"""Shard-scaling benchmark: sweep time and update throughput vs n_shards.
+
+The GTChain partition promoted to placement (repro.distributed.graph): for
+each shard count the same graph is split into block-balanced shards and the
+same workloads run through the shard_map compute path —
+
+  * whole-graph sweep time (one ProcessEdge push, the PageRank inner loop);
+  * sustained update throughput through the sharded GraphService
+    (apply -> route-to-owning-shard -> flush);
+
+each row also carries the tuner's plan for that shard count (cut fraction
+alongside contiguity) so the JSON can correlate plan choices with shard
+scaling.  Runs on any device count: shards beyond the mesh axis stack
+locally, so CPU CI (1 device, or 8 forced host devices in the multi-device
+job) exercises the identical code path as a real pod slice.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import SCALE, dataset, emit, time_fn
+from repro.core import build_from_coo
+from repro.core.cblist import blocks_needed
+from repro.core.engine import process_edge_push
+from repro.core.tuner import choose_plan
+from repro.data import update_stream
+from repro.distributed.graph import shard_cbl
+from repro.graph import pagerank
+from repro.stream import GraphService
+
+SHARD_COUNTS = (1, 2, 8)
+BATCH = max(64, int(256 * SCALE))
+N_BATCHES = 4
+BW = 32
+
+
+def run():
+    nv, src, dst, w = dataset("rmat_tiny")
+    # block capacity must cover the per-vertex ceil demand (+ headroom), or
+    # the bulk load silently drops edges and the placement plan skews
+    demand = blocks_needed(src, nv, BW)
+    nb = max(64, demand + demand // 2 + nv // 8)
+    cbl = build_from_coo(src, dst, w, num_vertices=nv, num_blocks=nb,
+                         block_width=BW)
+    x = jnp.ones((cbl.capacity_vertices,), jnp.float32)
+    batches = list(update_stream(nv, (np.asarray(src), np.asarray(dst)),
+                                 BATCH, N_BATCHES + 1, seed=9))
+    out = {"n_devices": len(jax.devices()), "shards": {}}
+
+    for s_count in SHARD_COUNTS:
+        graph = cbl if s_count == 1 else shard_cbl(cbl, s_count)[0]
+        plan = choose_plan(graph, "scan_all")
+        cut = plan.cut_fraction
+
+        t_sweep = time_fn(lambda g=graph: process_edge_push(g, x))
+        t_pr = time_fn(lambda g=graph: pagerank(g, max_iters=5), iters=3)
+
+        svc = GraphService.from_coo(
+            np.asarray(src), np.asarray(dst), np.asarray(w), num_vertices=nv,
+            num_blocks=nb, block_width=BW,
+            log_capacity=max(1024, BATCH * 4), n_shards=s_count)
+        us0, ud0, uw0, op0 = batches[0]
+        svc.apply(us0, ud0, uw0, op0)
+        svc.flush()                               # jit warmup epoch
+        t0 = time.perf_counter()
+        for us, ud, uw, op in batches[1:]:
+            svc.apply(us, ud, uw, op)
+            svc.flush()
+        jax.block_until_ready(svc.snapshot.cbl)
+        t_upd = (time.perf_counter() - t0) / N_BATCHES
+
+        derived = (f"cut={cut:.3f},contiguity={plan.contiguity:.3f},"
+                   f"strategy={plan.strategy}")
+        emit(f"shard/sweep_s{s_count}", t_sweep, derived)
+        emit(f"shard/pagerank5_s{s_count}", t_pr, derived)
+        emit(f"shard/update_flush_s{s_count}", t_upd,
+             f"ups={BATCH / t_upd:.0f},{derived}")
+        out["shards"][str(s_count)] = {
+            "sweep_us": round(t_sweep * 1e6, 1),
+            "pagerank5_us": round(t_pr * 1e6, 1),
+            "updates_per_s": round(BATCH / t_upd, 1),
+            "cut_fraction": round(cut, 4),
+            "contiguity": round(plan.contiguity, 4),
+            "strategy": plan.strategy,
+            "impl": plan.impl,
+        }
+    return out
+
+
+if __name__ == "__main__":
+    import json
+
+    from benchmarks import common
+    summary = run()
+    with open("BENCH_shard.json", "w") as f:
+        json.dump({"bench": "shard", "rows": common.ROWS,
+                   "summary": summary}, f, indent=1, default=float)
+    print("wrote BENCH_shard.json")

@@ -9,6 +9,7 @@ REPRO_BENCH_SCALE (default 1.0; CI uses 0.25).
   Fig 12 -> bench_update     Fig 13 -> bench_batchsize
   Fig 14 / Table 3 -> bench_interleave
   serving layer (repro.stream) -> bench_stream
+  graph sharding (repro.distributed.graph) -> bench_shard
   §Roofline (dry-run derived) -> roofline (requires experiments/dryrun/)
 """
 import json
@@ -30,11 +31,12 @@ def _dump(short: str, rows, summary) -> None:
 
 def main() -> None:
     from benchmarks import (bench_analysis, bench_batchsize, bench_interleave,
-                            bench_query, bench_stream, bench_update, common)
+                            bench_query, bench_shard, bench_stream,
+                            bench_update, common)
     print("name,us_per_call,derived")
     ok = True
     for mod in (bench_query, bench_analysis, bench_update, bench_batchsize,
-                bench_interleave, bench_stream):
+                bench_interleave, bench_stream, bench_shard):
         short = mod.__name__.split(".")[-1].removeprefix("bench_")
         start = len(common.ROWS)
         try:

@@ -33,9 +33,11 @@ def main():
     args = ap.parse_args()
 
     src, dst = rmat_edges(args.vertices, args.edges, seed=0)
+    # num_blocks left to the service's demand-based default: the old
+    # edges//8 heuristic under-provisioned skewed graphs and build_from_coo
+    # silently dropped chains while v_deg still counted them
     service = GraphService.from_coo(
-        src, dst, num_vertices=args.vertices,
-        num_blocks=args.edges // 8, block_width=32,
+        src, dst, num_vertices=args.vertices, block_width=32,
         log_capacity=max(4096, args.batch * 4),
         policy=MaintenancePolicy(contiguity_floor=args.contiguity_floor))
     ranks = service.analytics("pagerank", max_iters=50, tol=1e-9)

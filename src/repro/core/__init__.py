@@ -12,7 +12,8 @@ from repro.core.updates import (DELETE, INSERT, NOP, UpdateStats, add_vertices,
 from repro.core.engine import (in_degrees, out_degrees, process_edge_pull,
                                process_edge_push, process_edge_push_feat,
                                process_vertex)
-from repro.core.traversal import (Partition, gtchain_partition, lane_mask,
+from repro.core.traversal import (Partition, PlacementPlan, gtchain_partition,
+                                  lane_mask, make_placement_plan,
                                   partition_balance, scan_edges, scan_vertices,
                                   scan_vertices_cond, vertex_table_partition,
                                   read_vertex)

@@ -225,6 +225,20 @@ def grow(cbl: CBList, num_blocks: Optional[int] = None,
                   v_head=v_head, v_tail=v_tail, n_vertices=cbl.n_vertices)
 
 
+def blocks_needed(src, num_vertices: int, block_width: int) -> int:
+    """Host-side ceil-per-vertex block demand of a COO edge list.
+
+    :func:`build_from_coo` requires ``num_blocks`` at least this large —
+    below it, chains past capacity are silently dropped while the vertex
+    table still counts their edges (an inconsistent store that
+    :func:`repro.distributed.graph.shard_cbl` refuses).  Callers should add
+    headroom on top for incremental growth.
+    """
+    import numpy as np
+    deg = np.bincount(np.asarray(src), minlength=num_vertices)
+    return int(np.ceil(deg / block_width).sum())
+
+
 def degrees(cbl: CBList) -> jax.Array:
     return cbl.v_deg
 

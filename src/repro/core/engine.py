@@ -54,6 +54,10 @@ COMBINERS = {
     "max": jax.ops.segment_max,
 }
 
+# shared default edge functions: one object per semantic so the dispatching
+# wrappers and the jitted implementations hit the same jit cache entry
+_DEFAULT_EDGE_F = lambda xs, w: xs * w
+
 
 def _gather_values(x: jax.Array, ids: jax.Array, impl: str) -> jax.Array:
     """x[ids] through the scalar-prefetched block_gather when impl != xla.
@@ -99,10 +103,9 @@ def process_vertex(cbl: CBList, f: Callable, x: jax.Array,
     return jnp.where(live, y, x)
 
 
-@functools.partial(jax.jit, static_argnames=("dense_f", "combine", "impl"))
-def process_edge_push(cbl: CBList, x: jax.Array,
+def process_edge_push(cbl, x: jax.Array,
                       active: Optional[jax.Array] = None,
-                      *, dense_f: Callable = lambda xs, w: xs * w,
+                      *, dense_f: Callable = _DEFAULT_EDGE_F,
                       combine: str = "sum",
                       impl: str = "xla") -> jax.Array:
     """Push sweep: y[dst] = combine over in-edges of dense_f(x[src], w).
@@ -110,7 +113,25 @@ def process_edge_push(cbl: CBList, x: jax.Array,
     Block-parallel over the GTChain: each block has exactly one owner, so the
     per-block source value is a scalar broadcast — no gather on the hot path
     (this is the locality the GTChain buys).
+
+    Accepts a single-device :class:`CBList` or a
+    :class:`~repro.distributed.graph.ShardedCBList` — the sharded path runs
+    this same sweep per shard under shard_map and combines across the cut.
     """
+    if not isinstance(cbl, CBList):
+        from repro.distributed.graph import sharded_process_edge_push
+        return sharded_process_edge_push(cbl, x, active, dense_f=dense_f,
+                                         combine=combine, impl=impl)
+    return _process_edge_push(cbl, x, active, dense_f=dense_f,
+                              combine=combine, impl=impl)
+
+
+@functools.partial(jax.jit, static_argnames=("dense_f", "combine", "impl"))
+def _process_edge_push(cbl: CBList, x: jax.Array,
+                       active: Optional[jax.Array] = None,
+                       *, dense_f: Callable = _DEFAULT_EDGE_F,
+                       combine: str = "sum",
+                       impl: str = "xla") -> jax.Array:
     st = cbl.store
     nv = cbl.capacity_vertices
     owner_safe = jnp.maximum(st.owner, 0)
@@ -130,10 +151,9 @@ def process_edge_push(cbl: CBList, x: jax.Array,
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("dense_f", "combine", "impl"))
-def process_edge_pull(cbl: CBList, x: jax.Array,
+def process_edge_pull(cbl, x: jax.Array,
                       active_dst: Optional[jax.Array] = None,
-                      *, dense_f: Callable = lambda xd, w: xd * w,
+                      *, dense_f: Callable = _DEFAULT_EDGE_F,
                       combine: str = "sum",
                       impl: str = "xla") -> jax.Array:
     """Pull sweep: y[src] = combine over out-edges of dense_f(x[dst], w).
@@ -141,8 +161,23 @@ def process_edge_pull(cbl: CBList, x: jax.Array,
     The x[dst] gather is the random-access pattern of the paper (§2.1); on
     the blocked layout it is a single vectorized take over lanes — or, with
     ``impl="pallas"``, a scalar-prefetched ``block_gather`` whose
-    destination ids stream ahead of the DMA pipeline.
+    destination ids stream ahead of the DMA pipeline.  Accepts a CBList or
+    a ShardedCBList (per-shard sweep + cross-cut combine).
     """
+    if not isinstance(cbl, CBList):
+        from repro.distributed.graph import sharded_process_edge_pull
+        return sharded_process_edge_pull(cbl, x, active_dst, dense_f=dense_f,
+                                         combine=combine, impl=impl)
+    return _process_edge_pull(cbl, x, active_dst, dense_f=dense_f,
+                              combine=combine, impl=impl)
+
+
+@functools.partial(jax.jit, static_argnames=("dense_f", "combine", "impl"))
+def _process_edge_pull(cbl: CBList, x: jax.Array,
+                       active_dst: Optional[jax.Array] = None,
+                       *, dense_f: Callable = _DEFAULT_EDGE_F,
+                       combine: str = "sum",
+                       impl: str = "xla") -> jax.Array:
     st = cbl.store
     nv = cbl.capacity_vertices
     mask = lane_mask(st)
@@ -163,8 +198,7 @@ def process_edge_pull(cbl: CBList, x: jax.Array,
     return COMBINERS[combine](per_blk, owner_seg, num_segments=nv)
 
 
-@functools.partial(jax.jit, static_argnames=("weighted", "impl"))
-def process_edge_push_feat(cbl: CBList, x: jax.Array,
+def process_edge_push_feat(cbl, x: jax.Array,
                            active: Optional[jax.Array] = None,
                            *, weighted: bool = True,
                            impl: str = "xla") -> jax.Array:
@@ -174,8 +208,21 @@ def process_edge_push_feat(cbl: CBList, x: jax.Array,
     lanes (one gather of F values per block — GTChain locality), then a
     segment-sum scatter keyed by the lane destinations.  With
     ``impl="pallas"`` the row gather is ``block_gather`` and the scatter is
-    the GTChain ``segment_matmul`` kernel.
+    the GTChain ``segment_matmul`` kernel.  Accepts CBList or ShardedCBList.
     """
+    if not isinstance(cbl, CBList):
+        from repro.distributed.graph import sharded_process_edge_push_feat
+        return sharded_process_edge_push_feat(cbl, x, active,
+                                              weighted=weighted, impl=impl)
+    return _process_edge_push_feat(cbl, x, active, weighted=weighted,
+                                   impl=impl)
+
+
+@functools.partial(jax.jit, static_argnames=("weighted", "impl"))
+def _process_edge_push_feat(cbl: CBList, x: jax.Array,
+                            active: Optional[jax.Array] = None,
+                            *, weighted: bool = True,
+                            impl: str = "xla") -> jax.Array:
     st = cbl.store
     nv = cbl.capacity_vertices
     owner_safe = jnp.maximum(st.owner, 0)
@@ -193,7 +240,10 @@ def out_degrees(cbl: CBList) -> jax.Array:
     return cbl.v_deg
 
 
-def in_degrees(cbl: CBList) -> jax.Array:
+def in_degrees(cbl) -> jax.Array:
+    if not isinstance(cbl, CBList):
+        from repro.distributed.graph import sharded_in_degrees
+        return sharded_in_degrees(cbl)
     st = cbl.store
     nv = cbl.capacity_vertices
     mask = lane_mask(st)

@@ -16,10 +16,11 @@ are slices.  The balance statistics here feed the adaptation layer.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import blockstore as bs
 from repro.core.blockstore import NULL, PAD
@@ -87,8 +88,11 @@ class Partition(NamedTuple):
 
 
 def vertex_table_partition(cbl: CBList, n_streams: int) -> Partition:
-    nv = cbl.capacity_vertices
-    bounds = jnp.linspace(0, nv, n_streams + 1).astype(jnp.int32)
+    """Contiguous ranges over the *live* vertices (``n_vertices``), not the
+    table capacity — trailing streams over padding would hold no edges and
+    make the balance statistic lie under low table fill."""
+    nv = jnp.asarray(cbl.n_vertices, jnp.int32)
+    bounds = (jnp.arange(n_streams + 1, dtype=jnp.int32) * nv) // n_streams
     return Partition("vertex", bounds[:-1], bounds[1:])
 
 
@@ -98,6 +102,86 @@ def gtchain_partition(cbl: CBList, n_streams: int) -> Partition:
     bounds = jnp.linspace(0, 1, n_streams + 1)
     bounds = (bounds * live).astype(jnp.int32)
     return Partition("gtchain", bounds[:-1], bounds[1:])
+
+
+# ---------------------------------------------------------------------------
+# Placement plan: the GTChain partition promoted from a statistic to the
+# actual placement of data and work (repro.distributed.graph consumes it)
+# ---------------------------------------------------------------------------
+
+class PlacementPlan(NamedTuple):
+    """GTChain-balanced shard placement for a CBList.
+
+    The coroutine-stream partition of §5.2 promoted to data placement: shard
+    boundaries fall on vertex boundaries (a chain is atomic — it lives
+    wholly on the shard owning its vertex) but are *chosen* by cumulative
+    block count, so every shard holds ≈ ``total_blocks / n_shards`` blocks
+    regardless of degree skew.  All ids stay global: a shard-local CBList
+    keeps the full vertex-id space and only materializes owned chains.
+    """
+    n_shards: int            # static shard count
+    vertex_bounds: tuple     # static (n_shards+1,) contiguous vertex ranges
+    vertex_shard: jax.Array  # i32[NV_cap] vertex -> owning shard
+    block_shard: jax.Array   # i32[NB] source-cbl block -> shard (NULL = free)
+    halo: Optional[jax.Array]  # bool[S, NV_cap] shard s sends messages to v
+                             # (v appears as a dst on s but is owned
+                             # elsewhere); None unless requested — the live
+                             # statistic is repro.distributed.graph.halo_masks
+    blocks_per_shard: tuple  # static per-shard live block counts
+
+
+def make_placement_plan(cbl: CBList, n_shards: int,
+                        with_halo: bool = False) -> PlacementPlan:
+    """Derive the block-balanced vertex cut (host-side, concrete).
+
+    Boundary k is the first vertex whose cumulative chain-block count reaches
+    ``k/n_shards`` of the total — the GTChain partition rounded outward to
+    vertex boundaries so chains never straddle a shard.
+
+    ``with_halo=True`` additionally materializes the build-time halo sets
+    (an O(lanes) host scan the shard_map compute path never needs — its
+    collectives reduce the full vertex space; request it for analysis, or
+    use :func:`repro.distributed.graph.halo_masks` for the live statistic).
+    """
+    nvc = cbl.capacity_vertices
+    nbv = np.asarray(cbl.v_level)                   # blocks per chain
+    cum = np.cumsum(nbv)
+    total = int(cum[-1]) if nvc else 0
+    targets = np.arange(1, n_shards) * (total / max(n_shards, 1))
+    inner = np.searchsorted(cum, targets, side="left").astype(np.int64)
+    bounds = np.concatenate([[0], inner, [nvc]])
+    bounds = np.maximum.accumulate(bounds)          # monotone (empty shards ok)
+
+    vertex_shard = np.searchsorted(bounds[1:], np.arange(nvc),
+                                   side="right").astype(np.int32)
+    vertex_shard = np.minimum(vertex_shard, n_shards - 1)
+    owner = np.asarray(cbl.store.owner)
+    block_shard = np.where(owner == NULL, NULL,
+                           vertex_shard[np.maximum(owner, 0)]).astype(np.int32)
+    blocks_per_shard = tuple(
+        int((block_shard == k).sum()) for k in range(n_shards))
+
+    halo = None
+    if with_halo:
+        # halo[s, v]: some edge stored on shard s targets v owned by another
+        # shard — the messages a halo-exchange communication scheme would
+        # have to carry across the cut
+        keys = np.asarray(cbl.store.keys)
+        count = np.asarray(cbl.store.count)
+        lane = np.arange(cbl.block_width)
+        live = (lane[None, :] < count[:, None]) & (owner != NULL)[:, None]
+        halo = np.zeros((n_shards, nvc), bool)
+        src_shard = np.broadcast_to(block_shard[:, None], keys.shape)
+        dst = np.clip(keys, 0, nvc - 1)
+        remote = live & (vertex_shard[dst] != src_shard)
+        halo[src_shard[remote], dst[remote]] = True
+        halo = jnp.asarray(halo)
+
+    return PlacementPlan(
+        n_shards=n_shards, vertex_bounds=tuple(int(b) for b in bounds),
+        vertex_shard=jnp.asarray(vertex_shard),
+        block_shard=jnp.asarray(block_shard),
+        halo=halo, blocks_per_shard=blocks_per_shard)
 
 
 def partition_balance(cbl: CBList, part: Partition) -> jax.Array:

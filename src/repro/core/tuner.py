@@ -26,6 +26,7 @@ overhead per block.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Optional
 
 import jax
@@ -33,6 +34,8 @@ import jax.numpy as jnp
 
 from repro.core import blockstore as bs
 from repro.core.cblist import CBList
+
+logger = logging.getLogger(__name__)
 
 STRATEGIES = ("all_hard", "all_soft", "hybrid_block", "hybrid_hot")
 
@@ -50,6 +53,7 @@ class SystemProbe:
     hbm_bw_gbps: float = 819.0          # v5e HBM bandwidth
     block_fetch_overhead_us: float = 0.5   # exposed latency of a cold block DMA
     scalar_prefetch_overhead_us: float = 0.05  # per-block SMEM/index setup
+    remote_message_overhead_us: float = 2.0  # per-block cross-shard collective cost
     vmem_bytes: int = 64 * 2 ** 20      # ~64 MiB usable VMEM on v5e half?  -> lookahead cap
     max_lookahead: int = 8
 
@@ -60,6 +64,9 @@ class ExecPlan:
     partition: str           # "vertex" | "gtchain"
     lookahead: int           # pipeline depth (coroutine-count analogue)
     impl: str                # "xla" | "pallas"
+    n_shards: int = 1        # graph shards the sweep spans
+    cut_fraction: float = 0.0  # fraction of edges crossing the shard cut
+    contiguity: float = 1.0  # the P_h statistic the decision used
 
 
 def choose_lookahead(probe: SystemProbe, block_bytes: int) -> int:
@@ -71,21 +78,34 @@ def choose_lookahead(probe: SystemProbe, block_bytes: int) -> int:
     return int(max(2, min(need, probe.max_lookahead, cap_vmem)))
 
 
-def choose_plan(cbl: CBList, task: str, probe: Optional[SystemProbe] = None,
+def choose_plan(cbl, task: str, probe: Optional[SystemProbe] = None,
                 on_tpu: Optional[bool] = None) -> ExecPlan:
     """Execution strategy tuner (paper Fig. 8).
 
     ``task``: "scan_all" (PageRank/CC/LP dense sweeps), "frontier"
     (BFS/SSSP sparse steps), "query" (read_edge), "batch_update".
-    ``on_tpu`` defaults to backend autodetection.
+    ``on_tpu`` defaults to backend autodetection.  Accepts a CBList or a
+    :class:`~repro.distributed.graph.ShardedCBList`; sharded plans report
+    the cut fraction (remote-message share) alongside contiguity so bench
+    output can correlate plan choices with shard scaling.
     """
     probe = probe or SystemProbe()
     if on_tpu is None:
         on_tpu = jax.default_backend() == "tpu"
-    contiguity = float(bs.gtchain_contiguity(cbl.store))       # P_h analogue
-    frac_chunks = float((cbl.v_level <= 1).mean())             # small-chunk share
-    block_bytes = cbl.store.block_width * 8                    # key+val lanes
-    lanes = cbl.store.num_blocks * cbl.store.block_width
+    if isinstance(cbl, CBList):
+        n_shards = 1
+        cut = 0.0
+        contiguity = float(bs.gtchain_contiguity(cbl.store))   # P_h analogue
+        frac_chunks = float((cbl.v_level <= 1).mean())         # small-chunk share
+        lanes = cbl.store.num_blocks * cbl.store.block_width
+    else:                                # ShardedCBList: shard-local stats
+        from repro.distributed.graph import cut_fraction, shard_contiguity
+        n_shards = cbl.n_shards
+        cut = float(cut_fraction(cbl))
+        contiguity = float(shard_contiguity(cbl))
+        frac_chunks = float((cbl.v_level <= 1).mean())
+        lanes = cbl.num_blocks * cbl.block_width   # per-shard kernel extent
+    block_bytes = cbl.block_width * 8                          # key+val lanes
     lookahead = choose_lookahead(probe, block_bytes)
 
     # partition: whole-graph sweeps use the fine-grained GTChain partition;
@@ -93,8 +113,12 @@ def choose_plan(cbl: CBList, task: str, probe: Optional[SystemProbe] = None,
     # scan_vertices+scan_edges over everything, paper §5.2)
     partition = "gtchain" if task == "scan_all" else "vertex"
 
-    # hybrid decision: C_m × (1 - P_h) vs C_coro  (paper §6.2)
-    exposed = probe.block_fetch_overhead_us * (1.0 - contiguity)
+    # hybrid decision: C_m_eff × (1 - P_h) vs C_coro  (paper §6.2, extended:
+    # a message crossing the shard cut is just a bigger C_m — the exposed
+    # fetch latency inflates by the expected cross-shard collective cost)
+    c_m_eff = (probe.block_fetch_overhead_us
+               + cut * probe.remote_message_overhead_us)
+    exposed = c_m_eff * (1.0 - contiguity)
     if exposed < probe.scalar_prefetch_overhead_us:
         strategy = "all_hard"            # hardware-analogue pipeline suffices
     elif task == "batch_update" or task == "query":
@@ -112,11 +136,17 @@ def choose_plan(cbl: CBList, task: str, probe: Optional[SystemProbe] = None,
     impl = ("pallas" if on_tpu and strategy != "all_hard"
             and partition == "gtchain" and lanes >= MIN_PALLAS_LANES
             else "xla")
-    return ExecPlan(strategy=strategy, partition=partition,
-                    lookahead=lookahead, impl=impl)
+    plan = ExecPlan(strategy=strategy, partition=partition,
+                    lookahead=lookahead, impl=impl, n_shards=n_shards,
+                    cut_fraction=cut, contiguity=contiguity)
+    logger.info(
+        "choose_plan task=%s strategy=%s impl=%s n_shards=%d "
+        "contiguity=%.3f cut_fraction=%.3f exposed_us=%.3f",
+        task, strategy, impl, n_shards, contiguity, cut, exposed)
+    return plan
 
 
-def choose_engine_impl(cbl: CBList, task: str = "scan_all",
+def choose_engine_impl(cbl, task: str = "scan_all",
                        probe: Optional[SystemProbe] = None,
                        backend: Optional[str] = None) -> str:
     """The ``impl=`` to pass to ``process_edge_push/pull/push_feat``.

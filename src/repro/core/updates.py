@@ -89,10 +89,22 @@ def _locate(cbl: CBList, qsrc: jax.Array, qdst: jax.Array, active: jax.Array):
     return fblk, flane
 
 
-@jax.jit
-def read_edges(cbl: CBList, qsrc: jax.Array, qdst: jax.Array
+def read_edges(cbl, qsrc: jax.Array, qdst: jax.Array
                ) -> Tuple[jax.Array, jax.Array]:
-    """Batched read_edge(v_src, v_dst): (found, weight)."""
+    """Batched read_edge(v_src, v_dst): (found, weight).
+
+    Accepts a CBList or a ShardedCBList (fan-out: only the owning shard can
+    find an edge) — like every update entry point in this module.
+    """
+    if not isinstance(cbl, CBList):
+        from repro.distributed.graph import sharded_read_edges
+        return sharded_read_edges(cbl, qsrc, qdst)
+    return _read_edges(cbl, qsrc, qdst)
+
+
+@jax.jit
+def _read_edges(cbl: CBList, qsrc: jax.Array, qdst: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
     fblk, flane = _locate(cbl, qsrc, qdst,
                           jnp.ones(qsrc.shape, bool))
     found = fblk != NULL
@@ -237,18 +249,29 @@ def _apply_inserts(cbl: CBList, src, dst, w, mask):
             dropped)
 
 
-@jax.jit
-def batch_update_stats(cbl: CBList, src: jax.Array, dst: jax.Array,
+def batch_update_stats(cbl, src: jax.Array, dst: jax.Array,
                        w: Optional[jax.Array] = None,
-                       op: Optional[jax.Array] = None
-                       ) -> Tuple[CBList, UpdateStats]:
+                       op: Optional[jax.Array] = None):
     """:func:`batch_update` + per-batch :class:`UpdateStats` accounting.
 
     ``stats.dropped_edges > 0`` means the free stack ran out mid-batch;
     the returned CBList is still consistent (it simply lacks the dropped
     edges) — grow capacity and re-apply the batch to the *pre-update* CBList
     for loss-free semantics (pure updates make the retry exact).
+
+    A ShardedCBList routes each record to its source's owning shard.
     """
+    if not isinstance(cbl, CBList):
+        from repro.distributed.graph import sharded_batch_update_stats
+        return sharded_batch_update_stats(cbl, src, dst, w, op)
+    return _batch_update_stats(cbl, src, dst, w, op)
+
+
+@jax.jit
+def _batch_update_stats(cbl: CBList, src: jax.Array, dst: jax.Array,
+                        w: Optional[jax.Array] = None,
+                        op: Optional[jax.Array] = None
+                        ) -> Tuple[CBList, UpdateStats]:
     if w is None:
         w = jnp.ones(src.shape, jnp.float32)
     if op is None:
@@ -260,10 +283,9 @@ def batch_update_stats(cbl: CBList, src: jax.Array, dst: jax.Array,
                             applied_deletes=n_del)
 
 
-@jax.jit
-def batch_update(cbl: CBList, src: jax.Array, dst: jax.Array,
+def batch_update(cbl, src: jax.Array, dst: jax.Array,
                  w: Optional[jax.Array] = None,
-                 op: Optional[jax.Array] = None) -> CBList:
+                 op: Optional[jax.Array] = None):
     """Apply a batch of edge updates (paper's BatchUpdate).
 
     ``op``: +1 insert, -1 delete, 0 nop (padding).
@@ -284,10 +306,18 @@ def batch_update(cbl: CBList, src: jax.Array, dst: jax.Array,
     return cbl
 
 
-@jax.jit
-def upsert_edges(cbl: CBList, src, dst, w=None,
-                 valid: Optional[jax.Array] = None) -> CBList:
+def upsert_edges(cbl, src, dst, w=None,
+                 valid: Optional[jax.Array] = None):
     """Insert-or-replace: deletes any existing (src, dst) first."""
+    if not isinstance(cbl, CBList):
+        from repro.distributed.graph import sharded_upsert_edges
+        return sharded_upsert_edges(cbl, src, dst, w, valid)
+    return _upsert_edges(cbl, src, dst, w, valid)
+
+
+@jax.jit
+def _upsert_edges(cbl: CBList, src, dst, w=None,
+                  valid: Optional[jax.Array] = None) -> CBList:
     if w is None:
         w = jnp.ones(src.shape, jnp.float32)
     if valid is None:
@@ -297,10 +327,21 @@ def upsert_edges(cbl: CBList, src, dst, w=None,
     return cbl
 
 
-@jax.jit
-def delete_vertices(cbl: CBList, vids: jax.Array) -> CBList:
+def delete_vertices(cbl, vids: jax.Array):
     """UpdateVertex(delete): frees the out-chains of ``vids`` (NULL entries
-    ignored) and sweeps their in-edges out of every block."""
+    ignored) and sweeps their in-edges out of every block.
+
+    Sharded: the chain free lands on the owner shard, the in-edge sweep
+    runs on every shard (any shard may hold edges *into* a deleted vertex).
+    """
+    if not isinstance(cbl, CBList):
+        from repro.distributed.graph import sharded_delete_vertices
+        return sharded_delete_vertices(cbl, vids)
+    return _delete_vertices(cbl, vids)
+
+
+@jax.jit
+def _delete_vertices(cbl: CBList, vids: jax.Array) -> CBList:
     st = cbl.store
     nvc = cbl.capacity_vertices
     vids_safe = jnp.where(vids == NULL, nvc, vids)
@@ -335,6 +376,9 @@ def delete_vertices(cbl: CBList, vids: jax.Array) -> CBList:
                         v_head=v_head, v_tail=v_tail)
 
 
-def add_vertices(cbl: CBList, k: int | jax.Array) -> CBList:
+def add_vertices(cbl, k: int | jax.Array):
     """UpdateVertex(add): append-only (aligned to max logical id, paper §5.1)."""
+    if not isinstance(cbl, CBList):
+        from repro.distributed.graph import sharded_add_vertices
+        return sharded_add_vertices(cbl, k)
     return cbl._replace(n_vertices=cbl.n_vertices + jnp.asarray(k, jnp.int32))

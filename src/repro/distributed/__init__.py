@@ -1,0 +1,16 @@
+"""Distributed layers: GSPMD sharding rules for model params
+(:mod:`repro.distributed.sharding`) and the GTChain-partitioned graph
+shards with their shard_map compute path (:mod:`repro.distributed.graph`).
+"""
+from repro.distributed.graph import (ShardedCBList, compact_sharded,
+                                     cut_fraction, grow_sharded, halo_masks,
+                                     is_sharded, rebuild_sharded, shard_at,
+                                     shard_cbl, shard_contiguity, shard_mesh,
+                                     sharded_add_vertices,
+                                     sharded_batch_update_stats,
+                                     sharded_delete_vertices,
+                                     sharded_process_edge_pull,
+                                     sharded_process_edge_push,
+                                     sharded_process_edge_push_feat,
+                                     sharded_read_edges, sharded_upsert_edges,
+                                     unshard)

@@ -1,0 +1,512 @@
+"""ShardedCBList — GTChain-partitioned CBList shards on a device mesh.
+
+The paper's fine-grained GTChain partition (§5.2) exists to hand each
+coroutine an equal slice of *blocks* regardless of degree skew.  Here the
+partition is promoted from a load-balance statistic to the actual placement
+of data and work: :func:`repro.core.traversal.make_placement_plan` cuts the
+vertex space at block-balanced boundaries, and every resulting shard is a
+complete shard-local :class:`~repro.core.cblist.CBList` (global vertex-id
+space, only owned chains materialized) stacked along a leading shard axis
+and laid out over a 1-D ``("shard",)`` device mesh.
+
+Compute follows the data.  Every engine sweep runs per shard under
+:func:`repro.compat.shard_map` — the per-shard body is the *unchanged*
+single-device sweep (``impl="xla" | "pallas"`` dispatch intact), producing a
+partial output over the full vertex space; messages crossing the cut are
+combined by one cross-shard collective:
+
+  * ``sum``     — ``psum_scatter`` + ``all_gather`` (a segment-sum of the
+    remote messages, each shard reducing its owned slice) when the vertex
+    capacity tiles the mesh axis, plain ``psum`` otherwise;
+  * ``min/max`` — ``pmin`` / ``pmax`` (the identity fill of the local
+    segment ops makes non-owned entries neutral).
+
+Because each shard's edge set is disjoint and covers the graph, the
+combined result equals the single-device sweep exactly (bit-for-bit for
+min/max and integer frontiers; up to summation order for float sums).
+
+The shard count may exceed the device count: the mesh axis is the largest
+divisor of ``n_shards`` that fits ``jax.devices()``, and the shard_map body
+``vmap``s over its local stack of shards.  On CPU CI this runs under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+Updates route to owning shards (an edge lives with its source's shard), so
+``BatchUpdate`` is an embarrassingly parallel ``vmap`` over shards with
+per-shard op masks — no cross-shard traffic at all.  Maintenance
+(grow/compact/rebuild) applies per shard; grow keeps shard shapes uniform
+so the stack stays a fixed-shape pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import compat
+from repro.core import blockstore as bs
+from repro.core.blockstore import NULL
+from repro.core.cblist import CBList, build_from_coo, compact_cbl, to_coo
+from repro.core.cblist import grow as grow_cbl
+from repro.core.cblist import rebuild as rebuild_cbl
+from repro.core.engine import _DEFAULT_EDGE_F
+from repro.core.traversal import PlacementPlan, lane_mask, make_placement_plan
+from repro.core.updates import (NOP, UpdateStats, _batch_update_stats,
+                                _delete_vertices, _read_edges, _upsert_edges)
+
+# cross-shard combine for sum sweeps: "auto" uses psum_scatter+all_gather
+# (each shard segment-sums its owned slice of the remote messages) when the
+# vertex capacity tiles the mesh axis, else a plain psum all-reduce
+REDUCE_MODE = "auto"          # "auto" | "all_reduce" | "reduce_scatter"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedCBList:
+    """``n_shards`` shard-local CBLists stacked on a leading axis.
+
+    ``shards`` is a CBList pytree whose every leaf carries a leading shard
+    dim laid out over ``mesh``'s ``"shard"`` axis; ``v_shard`` is the
+    replicated vertex -> owning-shard map (the placement plan's cut).  All
+    vertex ids are global; shard k's vertex table is zero/NULL outside its
+    owned range.
+    """
+    shards: CBList        # every leaf: [S, ...]
+    v_shard: jax.Array    # i32[NV_cap] vertex -> owning shard (replicated)
+    mesh: Mesh            # static: 1-D ("shard",) mesh, size divides S
+
+    # ---- global-graph view (the CBList surface algorithms consume) -------
+
+    @property
+    def n_shards(self) -> int:
+        return self.shards.v_deg.shape[0]
+
+    @property
+    def capacity_vertices(self) -> int:
+        return self.shards.v_deg.shape[1]
+
+    @property
+    def num_blocks(self) -> int:
+        """Blocks *per shard* (every shard has the same static capacity)."""
+        return self.shards.store.keys.shape[1]
+
+    @property
+    def block_width(self) -> int:
+        return self.shards.store.keys.shape[2]
+
+    @property
+    def n_vertices(self) -> jax.Array:
+        return self.shards.n_vertices[0]
+
+    @property
+    def v_deg(self) -> jax.Array:
+        """Global out-degrees: each vertex is owned by exactly one shard."""
+        return self.shards.v_deg.sum(axis=0)
+
+    @property
+    def v_level(self) -> jax.Array:
+        return self.shards.v_level.max(axis=0)
+
+    @property
+    def num_edges(self) -> jax.Array:
+        return self.v_deg.sum()
+
+
+def _flatten(s: ShardedCBList):
+    return (s.shards, s.v_shard), (s.mesh,)
+
+
+def _unflatten(aux, children):
+    return ShardedCBList(shards=children[0], v_shard=children[1], mesh=aux[0])
+
+
+jax.tree_util.register_pytree_node(ShardedCBList, _flatten, _unflatten)
+
+
+def is_sharded(cbl) -> bool:
+    return isinstance(cbl, ShardedCBList)
+
+
+def shard_at(scbl: ShardedCBList, k: int) -> CBList:
+    """Shard k's local CBList view (host-side slice of the stack)."""
+    return jax.tree.map(lambda a: a[k], scbl.shards)
+
+
+def _restack(shards: Sequence[CBList], mesh: Mesh) -> CBList:
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
+    return jax.device_put(stacked, NamedSharding(mesh, P("shard")))
+
+
+def shard_mesh(n_shards: int) -> Mesh:
+    """A 1-D ``("shard",)`` mesh: the largest divisor of ``n_shards`` that
+    fits the available devices (shards beyond the axis size stack locally
+    and the shard_map body vmaps over them)."""
+    devs = jax.devices()
+    nd = max(d for d in range(1, min(n_shards, len(devs)) + 1)
+             if n_shards % d == 0)
+    return Mesh(np.asarray(devs[:nd]), ("shard",))
+
+
+# ---------------------------------------------------------------------------
+# Build / merge
+# ---------------------------------------------------------------------------
+
+def shard_cbl(cbl: CBList, n_shards: int, mesh: Optional[Mesh] = None,
+              block_slack: float = 1.5,
+              plan: Optional[PlacementPlan] = None
+              ) -> Tuple[ShardedCBList, PlacementPlan]:
+    """Split ``cbl`` into GTChain-balanced shards (host-side bulk re-load).
+
+    Every shard gets the same static block capacity (the balanced per-shard
+    demand times ``block_slack``) so the stack is a fixed-shape pytree; the
+    per-shard bulk load preserves global vertex ids and the live-vertex
+    count, so shard-local sweeps produce globally indexed partial results.
+    """
+    live_blocks = int((np.asarray(cbl.store.owner) != NULL).sum())
+    demand = int(np.asarray(cbl.v_level).sum())
+    if live_blocks != demand:
+        raise ValueError(
+            f"shard_cbl: vertex table claims {demand} chain blocks but only "
+            f"{live_blocks} are live — the source CBList silently dropped "
+            "edges at build time (num_blocks below the ceil-per-vertex "
+            "demand); rebuild it with enough blocks before sharding")
+    if plan is None:
+        plan = make_placement_plan(cbl, n_shards)
+    nvc = cbl.capacity_vertices
+    bw = cbl.block_width
+    max_edges = cbl.store.num_blocks * bw
+    s, d, w, valid = (np.asarray(a) for a in to_coo(cbl, max_edges))
+    n_live = int(cbl.n_vertices)
+    demand = max(plan.blocks_per_shard) if plan.blocks_per_shard else 0
+    nb_shard = max(8, int(np.ceil(demand * block_slack)) + 1)
+
+    # partition the COO once host-side; each shard's bulk load then runs
+    # over its own (padded) slice instead of the full edge list S times
+    vs = np.asarray(plan.vertex_shard)
+    owner_shard = np.where(valid, vs[np.clip(s, 0, nvc - 1)], -1)
+    per_idx = [np.nonzero(owner_shard == k)[0] for k in range(n_shards)]
+    cap = max(1, max(len(ix) for ix in per_idx))
+    shards = []
+    for ix in per_idx:
+        sk = np.zeros(cap, np.int32)
+        dk = np.zeros(cap, np.int32)
+        wk = np.zeros(cap, np.float32)
+        vk = np.zeros(cap, bool)
+        sk[:len(ix)], dk[:len(ix)] = s[ix], d[ix]
+        wk[:len(ix)], vk[:len(ix)] = w[ix], True
+        shards.append(build_from_coo(
+            jnp.asarray(sk), jnp.asarray(dk), jnp.asarray(wk),
+            num_vertices=n_live, num_blocks=nb_shard,
+            block_width=bw, vertex_capacity=nvc, valid=jnp.asarray(vk)))
+    if mesh is None:
+        mesh = shard_mesh(n_shards)
+    stacked = _restack(shards, mesh)
+    v_shard = jax.device_put(plan.vertex_shard, NamedSharding(mesh, P()))
+    return ShardedCBList(shards=stacked, v_shard=v_shard, mesh=mesh), plan
+
+
+def unshard(scbl: ShardedCBList, num_blocks: Optional[int] = None,
+            block_width: Optional[int] = None) -> CBList:
+    """Merge the shards back into one CBList (host-side bulk re-load)."""
+    per = scbl.num_blocks * scbl.block_width
+    parts = [to_coo(shard_at(scbl, k), per) for k in range(scbl.n_shards)]
+    s, d, w, valid = (jnp.concatenate([p[i] for p in parts])
+                      for i in range(4))
+    nb = num_blocks or scbl.n_shards * scbl.num_blocks
+    return build_from_coo(
+        s, d, w, num_vertices=int(scbl.n_vertices), num_blocks=nb,
+        block_width=block_width or scbl.block_width,
+        vertex_capacity=scbl.capacity_vertices, valid=valid)
+
+
+# ---------------------------------------------------------------------------
+# Placement statistics (tuner inputs)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def cut_fraction(scbl: ShardedCBList) -> jax.Array:
+    """Fraction of live edges whose destination is owned by another shard.
+
+    These are the messages the cross-shard collective must carry — the
+    tuner's remote-message term (a remote message is just a bigger C_m).
+    """
+    nvc = scbl.capacity_vertices
+
+    def per_shard(cbl: CBList, k: jax.Array):
+        mask = lane_mask(cbl.store)
+        dst = jnp.clip(cbl.store.keys, 0, nvc - 1)
+        remote = mask & (scbl.v_shard[dst] != k)
+        return remote.sum(), mask.sum()
+
+    rem, tot = jax.vmap(per_shard)(
+        scbl.shards, jnp.arange(scbl.n_shards, dtype=jnp.int32))
+    return rem.sum() / jnp.maximum(tot.sum(), 1)
+
+
+@jax.jit
+def shard_contiguity(scbl: ShardedCBList) -> jax.Array:
+    """Mean per-shard GTChain contiguity (the tuner's P_h, shard-locally)."""
+    return jax.vmap(lambda st: bs.gtchain_contiguity(st))(
+        scbl.shards.store).mean()
+
+
+@jax.jit
+def halo_masks(scbl: ShardedCBList) -> jax.Array:
+    """bool[S, NV]: current halo sets (shard s targets v owned elsewhere)."""
+    nvc = scbl.capacity_vertices
+
+    def per_shard(cbl: CBList, k: jax.Array):
+        mask = lane_mask(cbl.store)
+        dst = jnp.clip(cbl.store.keys, 0, nvc - 1)
+        remote = mask & (scbl.v_shard[dst] != k)
+        seg = jnp.where(remote, dst, nvc)
+        return jax.ops.segment_sum(remote.astype(jnp.int32).ravel(),
+                                   seg.ravel(), num_segments=nvc) > 0
+
+    return jax.vmap(per_shard)(
+        scbl.shards, jnp.arange(scbl.n_shards, dtype=jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Sharded engine sweeps (the shard_map compute path)
+# ---------------------------------------------------------------------------
+
+def _cross_shard_combine(local, combine: str, axis_size: int, tile_dim: int):
+    """Reduce one shard's partial sweep output across the mesh axis."""
+    if combine == "min":
+        return jax.lax.pmin(local, "shard")
+    if combine == "max":
+        return jax.lax.pmax(local, "shard")
+    scatter_ok = (axis_size > 1 and tile_dim % axis_size == 0
+                  and REDUCE_MODE in ("auto", "reduce_scatter"))
+    if scatter_ok:
+        # segment-sum of the cross-cut messages: every shard reduces its
+        # owned slice of the vertex space, then the slices are regathered
+        part = jax.lax.psum_scatter(local, "shard", tiled=True)
+        return jax.lax.all_gather(part, "shard", tiled=True)
+    return jax.lax.psum(local, "shard")
+
+
+def _sharded_sweep(scbl: ShardedCBList, x: jax.Array, active, sweep: Callable,
+                   combine: str):
+    """Run ``sweep(cbl_k, x, active) -> partial[NV(,F)]`` per shard under
+    shard_map and combine across the cut.  ``active=None`` stays None all
+    the way down so the per-shard sweep keeps its unmasked fast path."""
+    mesh = scbl.mesh
+    axis_size = mesh.shape["shard"]
+
+    def _local_combine(part):
+        if combine == "sum":
+            local = part.sum(axis=0)
+        elif combine == "min":
+            local = part.min(axis=0)
+        else:
+            local = part.max(axis=0)
+        return _cross_shard_combine(local, combine, axis_size, local.shape[0])
+
+    if active is None:
+        def body(shards_local: CBList, xx):
+            return _local_combine(
+                jax.vmap(lambda c: sweep(c, xx, None))(shards_local))
+
+        f = compat.shard_map(body, mesh=mesh, in_specs=(P("shard"), P()),
+                             out_specs=P(), check_rep=False)
+        return f(scbl.shards, x)
+
+    def body(shards_local: CBList, xx, act):
+        return _local_combine(
+            jax.vmap(lambda c: sweep(c, xx, act))(shards_local))
+
+    f = compat.shard_map(body, mesh=mesh, in_specs=(P("shard"), P(), P()),
+                         out_specs=P(), check_rep=False)
+    return f(scbl.shards, x, active)
+
+
+@functools.partial(jax.jit, static_argnames=("dense_f", "combine", "impl"))
+def sharded_process_edge_push(scbl: ShardedCBList, x: jax.Array,
+                              active: Optional[jax.Array] = None,
+                              *, dense_f: Callable = _DEFAULT_EDGE_F,
+                              combine: str = "sum",
+                              impl: str = "xla") -> jax.Array:
+    """Sharded push sweep: per-shard gathers stay local (each block's owner
+    is shard-resident), only the dst-side reduction crosses the cut."""
+    from repro.core.engine import process_edge_push
+
+    def sweep(cbl, xx, act):
+        return process_edge_push(cbl, xx, act, dense_f=dense_f,
+                                 combine=combine, impl=impl)
+
+    return _sharded_sweep(scbl, x, active, sweep, combine)
+
+
+@functools.partial(jax.jit, static_argnames=("dense_f", "combine", "impl"))
+def sharded_process_edge_pull(scbl: ShardedCBList, x: jax.Array,
+                              active_dst: Optional[jax.Array] = None,
+                              *, dense_f: Callable = _DEFAULT_EDGE_F,
+                              combine: str = "sum",
+                              impl: str = "xla") -> jax.Array:
+    """Sharded pull sweep: the x[dst] gather reads the replicated value
+    vector (remote dsts included — the halo read), the y[src] reduction is
+    shard-local by construction and the collective only reconciles the
+    disjoint owned slices."""
+    from repro.core.engine import process_edge_pull
+
+    def sweep(cbl, xx, act):
+        return process_edge_pull(cbl, xx, act, dense_f=dense_f,
+                                 combine=combine, impl=impl)
+
+    return _sharded_sweep(scbl, x, active_dst, sweep, combine)
+
+
+@functools.partial(jax.jit, static_argnames=("weighted", "impl"))
+def sharded_process_edge_push_feat(scbl: ShardedCBList, x: jax.Array,
+                                   active: Optional[jax.Array] = None,
+                                   *, weighted: bool = True,
+                                   impl: str = "xla") -> jax.Array:
+    from repro.core.engine import process_edge_push_feat
+
+    def sweep(cbl, xx, act):
+        return process_edge_push_feat(cbl, xx, act, weighted=weighted,
+                                      impl=impl)
+
+    return _sharded_sweep(scbl, x, active, sweep, "sum")
+
+
+@jax.jit
+def sharded_in_degrees(scbl: ShardedCBList) -> jax.Array:
+    from repro.core.engine import in_degrees
+    return jax.vmap(in_degrees)(scbl.shards).sum(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Sharded update / read paths (routing by owning shard)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def sharded_batch_update_stats(scbl: ShardedCBList, src: jax.Array,
+                               dst: jax.Array, w: Optional[jax.Array] = None,
+                               op: Optional[jax.Array] = None
+                               ) -> Tuple[ShardedCBList, UpdateStats]:
+    """Route each update record to its source's owning shard and apply all
+    shards' batches in parallel (vmap — updates never cross the cut because
+    an edge lives with its source)."""
+    from repro.core.updates import INSERT
+    if w is None:
+        w = jnp.ones(src.shape, jnp.float32)
+    if op is None:
+        op = jnp.full(src.shape, INSERT, jnp.int32)
+    nvc = scbl.capacity_vertices
+    owner = scbl.v_shard[jnp.clip(src, 0, nvc - 1)]
+    sids = jnp.arange(scbl.n_shards, dtype=jnp.int32)
+    ops = jnp.where(owner[None, :] == sids[:, None], op[None, :], NOP)
+    new_shards, stats = jax.vmap(
+        _batch_update_stats, in_axes=(0, None, None, None, 0))(
+            scbl.shards, src, dst, w, ops)
+    agg = UpdateStats(dropped_edges=stats.dropped_edges.sum(),
+                      applied_inserts=stats.applied_inserts.sum(),
+                      applied_deletes=stats.applied_deletes.sum())
+    return dataclasses.replace(scbl, shards=new_shards), agg
+
+
+@jax.jit
+def sharded_read_edges(scbl: ShardedCBList, qsrc: jax.Array, qdst: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Batched read_edge over shards: only the owner can find the edge."""
+    found, w = jax.vmap(_read_edges, in_axes=(0, None, None))(
+        scbl.shards, qsrc, qdst)
+    return found.any(axis=0), jnp.where(found, w, 0.0).sum(axis=0)
+
+
+@jax.jit
+def sharded_upsert_edges(scbl: ShardedCBList, src: jax.Array, dst: jax.Array,
+                         w: Optional[jax.Array] = None,
+                         valid: Optional[jax.Array] = None) -> ShardedCBList:
+    """Insert-or-replace routed by owning shard (delete+insert stay local)."""
+    if w is None:
+        w = jnp.ones(src.shape, jnp.float32)
+    if valid is None:
+        valid = jnp.ones(src.shape, bool)
+    nvc = scbl.capacity_vertices
+    owner = scbl.v_shard[jnp.clip(src, 0, nvc - 1)]
+    sids = jnp.arange(scbl.n_shards, dtype=jnp.int32)
+    valid_k = valid[None, :] & (owner[None, :] == sids[:, None])
+    new_shards = jax.vmap(_upsert_edges, in_axes=(0, None, None, None, 0))(
+        scbl.shards, src, dst, w, valid_k)
+    return dataclasses.replace(scbl, shards=new_shards)
+
+
+@jax.jit
+def sharded_delete_vertices(scbl: ShardedCBList,
+                            vids: jax.Array) -> ShardedCBList:
+    """UpdateVertex(delete) on every shard: the out-chain free is a no-op
+    off the owner shard, the in-edge sweep must run everywhere (any shard
+    may hold edges into a deleted vertex)."""
+    new_shards = jax.vmap(_delete_vertices, in_axes=(0, None))(
+        scbl.shards, vids)
+    return dataclasses.replace(scbl, shards=new_shards)
+
+
+def sharded_add_vertices(scbl: ShardedCBList, k) -> ShardedCBList:
+    bump = jnp.asarray(k, jnp.int32)
+    shards = scbl.shards._replace(n_vertices=scbl.shards.n_vertices + bump)
+    return dataclasses.replace(scbl, shards=shards)
+
+
+# ---------------------------------------------------------------------------
+# Sharded maintenance transforms (host-side, shapes may change)
+# ---------------------------------------------------------------------------
+
+def grow_sharded(scbl: ShardedCBList, num_blocks: Optional[int] = None,
+                 vertex_capacity: Optional[int] = None) -> ShardedCBList:
+    """Grow every shard to the same capacity (uniform shapes keep the stack
+    a fixed-shape pytree).  ``num_blocks`` is the per-shard target.  New
+    vertex ids are assigned to shards round-robin — they carry no edges yet,
+    so any owner is balanced."""
+    shards = [grow_cbl(shard_at(scbl, k), num_blocks=num_blocks,
+                       vertex_capacity=vertex_capacity)
+              for k in range(scbl.n_shards)]
+    v_shard = scbl.v_shard
+    nvc = scbl.capacity_vertices
+    if vertex_capacity is not None and vertex_capacity > nvc:
+        fresh = (jnp.arange(vertex_capacity - nvc, dtype=jnp.int32)
+                 % scbl.n_shards)
+        v_shard = jnp.concatenate([v_shard, fresh])
+    return ShardedCBList(shards=_restack(shards, scbl.mesh),
+                         v_shard=v_shard, mesh=scbl.mesh)
+
+
+@jax.jit
+def compact_sharded(scbl: ShardedCBList) -> ShardedCBList:
+    """Per-shard defragmentation (restores shard-local GTChain contiguity)."""
+    return dataclasses.replace(scbl,
+                               shards=jax.vmap(compact_cbl)(scbl.shards))
+
+
+def rebuild_sharded(scbl: ShardedCBList,
+                    max_edges: Optional[int] = None) -> ShardedCBList:
+    """Per-shard defragmenting rebuild (range-disjoint sorted chains)."""
+    me = max_edges or scbl.num_blocks * scbl.block_width
+    shards = [rebuild_cbl(shard_at(scbl, k), max_edges=me)
+              for k in range(scbl.n_shards)]
+    return dataclasses.replace(scbl, shards=_restack(shards, scbl.mesh))
+
+
+# ---------------------------------------------------------------------------
+# Sharded sampling (snapshot k-hop path)
+# ---------------------------------------------------------------------------
+
+def sharded_sample_neighbors(scbl: ShardedCBList, verts: jax.Array,
+                             key: jax.Array, k: int
+                             ) -> Tuple[jax.Array, jax.Array]:
+    """Fanout draw routed to owning shards: every shard runs the chain walk
+    (non-owned vertices have empty local chains and yield nothing), and the
+    merge keeps the unique owner's draw."""
+    from repro.graph.sampler import _sample_neighbors
+    out, ok = jax.vmap(_sample_neighbors, in_axes=(0, None, None, None))(
+        scbl.shards, verts, key, k)
+    merged = jnp.where(ok, out, 0).sum(axis=0)       # <=1 shard valid per vertex
+    valid = ok.any(axis=0)
+    return jnp.where(valid, merged, NULL), valid

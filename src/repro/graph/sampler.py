@@ -68,21 +68,39 @@ def _sample_neighbors(cbl: CBList, verts: jax.Array, key: jax.Array,
     return out, valid & (out != NULL)
 
 
+def _sample_neighbors_any(cbl, verts, key, k):
+    """Dispatch the per-hop draw: shard-routed on a ShardedCBList."""
+    if not isinstance(cbl, CBList):
+        from repro.distributed.graph import sharded_sample_neighbors
+        return sharded_sample_neighbors(cbl, verts, key, k)
+    return _sample_neighbors(cbl, verts, key, k)
+
+
 @functools.partial(jax.jit, static_argnames=("fanout",))
-def sample_subgraph(cbl: CBList, seeds: jax.Array, key: jax.Array,
+def sample_subgraph(cbl, seeds: jax.Array, key: jax.Array,
                     fanout: Sequence[int] = (15, 10)) -> SampledGraph:
-    """Layered fanout sampling from ``seeds``; fixed shapes per fanout spec."""
+    """Layered fanout sampling from ``seeds``; fixed shapes per fanout spec.
+
+    The frontier validity mask carries across hops: a lane whose draw failed
+    (or whose parent lane was already invalid) is parked at vertex 0 purely
+    as shape padding and every edge it emits downstream stays ``valid=False``
+    — without the carry, re-sampled dead lanes would emit phantom
+    ``valid=True`` edges out of vertex 0.
+    """
     frontier = seeds
+    alive = jnp.ones(seeds.shape, bool)
     srcs, dsts, layers, valids = [], [], [], []
     for h, k in enumerate(fanout):
         key, sub = jax.random.split(key)
-        nbrs, ok = _sample_neighbors(cbl, frontier, sub, k)
+        nbrs, ok = _sample_neighbors_any(cbl, frontier, sub, k)
+        ok = ok & alive[:, None]
         src = jnp.repeat(frontier, k)
         srcs.append(src)
         dsts.append(nbrs.reshape(-1))
         layers.append(jnp.full(src.shape, h, jnp.int32))
         valids.append(ok.reshape(-1))
-        frontier = jnp.where(ok.reshape(-1), nbrs.reshape(-1), 0)
+        alive = ok.reshape(-1)
+        frontier = jnp.where(alive, nbrs.reshape(-1), 0)
     return SampledGraph(src=jnp.concatenate(srcs),
                         dst=jnp.concatenate(dsts),
                         layer=jnp.concatenate(layers),

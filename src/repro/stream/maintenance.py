@@ -30,6 +30,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import blockstore as bs
 from repro.core.blockstore import NULL
@@ -74,19 +75,42 @@ def chain_overlap_fraction(cbl: CBList) -> jax.Array:
     return ovl.sum() / jnp.maximum(same.sum(), 1)
 
 
-def decide(cbl: CBList, pending_inserts: int = 0,
-           policy: MaintenancePolicy = MaintenancePolicy()
-           ) -> MaintenanceAction:
+def decide(cbl, pending_inserts: int = 0,
+           policy: MaintenancePolicy = MaintenancePolicy(),
+           headroom_only: bool = False) -> MaintenanceAction:
     """Pick the maintenance action for the current storage state.
 
     ``pending_inserts`` is the log's pending insert count — worst case every
     insert opens a fresh block, so it feeds the headroom projection and lets
     the scheduler grow *before* a flush would overflow (the reactive path —
     the ``dropped_edges`` counter — still catches pathological batches).
+
+    ``headroom_only=True`` skips the fragmentation statistics (overlap /
+    contiguity, two full-store scans): the proactive pre-flush call only
+    ever acts on a grow, so it should not pay for repairs it will not
+    schedule.
+
+    On a :class:`~repro.distributed.graph.ShardedCBList` the decision runs
+    per shard and the highest-priority shard action wins (grow > rebuild >
+    compact) — a single shard near exhaustion must grow the whole stack,
+    because shard shapes stay uniform.
     """
-    st = cbl.store
-    nb = st.num_blocks
-    free = int(bs.free_blocks_left(st))
+    if not isinstance(cbl, CBList):
+        return _decide_sharded(cbl, pending_inserts, policy, headroom_only)
+    return _decide_from_stats(
+        nb=cbl.store.num_blocks, free=int(bs.free_blocks_left(cbl.store)),
+        n_live=int(cbl.n_vertices), nv_cap=cbl.capacity_vertices,
+        overlap=0.0 if headroom_only else float(chain_overlap_fraction(cbl)),
+        contiguity=(1.0 if headroom_only
+                    else float(bs.gtchain_contiguity(cbl.store))),
+        pending_inserts=pending_inserts, policy=policy)
+
+
+def _decide_from_stats(*, nb: int, free: int, n_live: int, nv_cap: int,
+                       overlap: float, contiguity: float,
+                       pending_inserts: int,
+                       policy: MaintenancePolicy) -> MaintenanceAction:
+    """The threshold rules of :func:`decide` over concrete statistics."""
     projected_free = free - pending_inserts
     if projected_free < policy.headroom_floor * nb:
         target = nb * policy.grow_factor
@@ -96,18 +120,15 @@ def decide(cbl: CBList, pending_inserts: int = 0,
             kind="grow", num_blocks=target,
             reason=f"free blocks {free}/{nb} (pending {pending_inserts}) "
                    f"below headroom floor {policy.headroom_floor:.2f}")
-    nv_cap = cbl.capacity_vertices
-    spare_v = nv_cap - int(cbl.n_vertices)
+    spare_v = nv_cap - n_live
     if spare_v < policy.vertex_headroom_floor * nv_cap:
         return MaintenanceAction(
             kind="grow", vertex_capacity=nv_cap * policy.grow_factor,
-            reason=f"vertex ids {int(cbl.n_vertices)}/{nv_cap} near capacity")
-    overlap = float(chain_overlap_fraction(cbl))
+            reason=f"vertex ids {n_live}/{nv_cap} near capacity")
     if overlap > policy.overlap_ceiling:
         return MaintenanceAction(
             kind="rebuild",
             reason=f"chain overlap {overlap:.2f} above {policy.overlap_ceiling:.2f}")
-    contiguity = float(bs.gtchain_contiguity(st))
     if contiguity < policy.contiguity_floor:
         return MaintenanceAction(
             kind="compact",
@@ -115,11 +136,79 @@ def decide(cbl: CBList, pending_inserts: int = 0,
     return MaintenanceAction(kind="none", reason="all statistics in band")
 
 
-def apply_action(cbl: CBList, action: MaintenanceAction,
-                 policy: MaintenancePolicy = MaintenancePolicy()) -> CBList:
-    """Execute a scheduled action (pure; 'none' is the identity)."""
+_ACTION_PRIORITY = {"grow": 3, "rebuild": 2, "compact": 1, "none": 0}
+
+
+@jax.jit
+def _sharded_statistics(shards):
+    """Per-shard (free, overlap, contiguity) in one device round-trip —
+    ``decide`` sits on the flush hot path, so the sharded variant must not
+    pay n_shards× blocking host syncs."""
+    overlap = jax.vmap(chain_overlap_fraction)(shards)
+    contig = jax.vmap(lambda c: bs.gtchain_contiguity(c.store))(shards)
+    return shards.store.free_top, overlap, contig
+
+
+def _decide_sharded(scbl, pending_inserts: int, policy: MaintenancePolicy,
+                    headroom_only: bool = False) -> MaintenanceAction:
+    """Per-shard decisions folded into one action for the whole stack.
+
+    ``pending_inserts`` is charged to every shard (worst case the entire
+    batch routes to one shard); the grow target is the max over shard
+    targets so the grown stack stays uniform.
+    """
+    if headroom_only:
+        free = np.asarray(scbl.shards.store.free_top)
+        overlap = np.zeros(scbl.n_shards)
+        contig = np.ones(scbl.n_shards)
+    else:
+        free, overlap, contig = (np.asarray(x)
+                                 for x in _sharded_statistics(scbl.shards))
+    n_live = int(scbl.n_vertices)
+    best = MaintenanceAction(kind="none", reason="all shards in band")
+    for k in range(scbl.n_shards):
+        act = _decide_from_stats(
+            nb=scbl.num_blocks, free=int(free[k]), n_live=n_live,
+            nv_cap=scbl.capacity_vertices, overlap=float(overlap[k]),
+            contiguity=float(contig[k]), pending_inserts=pending_inserts,
+            policy=policy)
+        if act.kind == "none":
+            continue
+        act = act._replace(reason=f"shard {k}: {act.reason}")
+        if _ACTION_PRIORITY[act.kind] > _ACTION_PRIORITY[best.kind]:
+            best = act
+        elif act.kind == best.kind == "grow":
+            best = best._replace(
+                num_blocks=max(best.num_blocks, act.num_blocks),
+                vertex_capacity=max(best.vertex_capacity,
+                                    act.vertex_capacity))
+    return best
+
+
+def apply_action(cbl, action: MaintenanceAction,
+                 policy: MaintenancePolicy = MaintenancePolicy()):
+    """Execute a scheduled action (pure; 'none' is the identity).
+
+    Sharded storage applies per shard: compact/rebuild are shape-preserving
+    per-shard transforms, grow raises every shard to the same (per-shard)
+    block target so the stack keeps uniform shapes.
+    """
     if action.kind == "none":
         return cbl
+    if not isinstance(cbl, CBList):
+        from repro.distributed.graph import (compact_sharded, grow_sharded,
+                                             rebuild_sharded)
+        if action.kind == "compact":
+            return compact_sharded(cbl)
+        if action.kind == "rebuild":
+            max_edges = policy.max_edges_hint or (cbl.num_blocks
+                                                  * cbl.block_width)
+            return rebuild_sharded(cbl, max_edges=max_edges)
+        if action.kind == "grow":
+            return grow_sharded(
+                cbl, num_blocks=action.num_blocks or None,
+                vertex_capacity=action.vertex_capacity or None)
+        raise ValueError(f"unknown maintenance action {action.kind!r}")
     if action.kind == "compact":
         return compact_cbl(cbl)
     if action.kind == "rebuild":

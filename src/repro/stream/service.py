@@ -37,7 +37,7 @@ from typing import Dict, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.cblist import CBList, build_from_coo
+from repro.core.cblist import CBList, blocks_needed, build_from_coo
 from repro.core.tuner import SystemProbe, choose_engine_impl, choose_plan
 from repro.core.updates import (DELETE, INSERT, NOP, batch_update_stats,
                                 read_edges)
@@ -50,6 +50,13 @@ from repro.stream.maintenance import MaintenanceAction, MaintenancePolicy
 from repro.stream.snapshot import Snapshot
 
 MAX_GROW_RETRIES = 6
+
+
+def _num_blocks(cbl) -> int:
+    """Block capacity (per shard when sharded — the grow target unit).
+    The update/read entry points themselves dispatch on the storage type
+    (CBList vs ShardedCBList) inside repro.core.updates."""
+    return cbl.store.num_blocks if isinstance(cbl, CBList) else cbl.num_blocks
 
 # neutral warm-start values for vertices added by a capacity grow: each is
 # the "unknown" element of the matching incremental driver's lattice
@@ -99,7 +106,22 @@ class GraphService:
                  high_watermark: float = 0.75,
                  policy: MaintenancePolicy = MaintenancePolicy(),
                  probe: Optional[SystemProbe] = None,
-                 auto_flush: bool = True):
+                 auto_flush: bool = True,
+                 n_shards: int = 1, mesh=None):
+        """``n_shards > 1`` splits storage into GTChain-balanced shards on a
+        device mesh (:func:`repro.distributed.graph.shard_cbl`): flushes
+        route updates to owning shards, maintenance runs per shard, and
+        analytics sweeps run under shard_map.  An already-sharded
+        ``ShardedCBList`` is also accepted directly."""
+        if isinstance(cbl, CBList):
+            if n_shards > 1:
+                from repro.distributed.graph import shard_cbl
+                cbl, _ = shard_cbl(cbl, n_shards, mesh=mesh)
+        elif n_shards > 1 and cbl.n_shards != n_shards:
+            raise ValueError(
+                f"GraphService(n_shards={n_shards}) got storage already "
+                f"sharded {cbl.n_shards} ways — pass n_shards=1 to keep it, "
+                "or reshard explicitly (unshard + shard_cbl) first")
         self._snap = snap.snapshot_of(cbl)
         self._log: UpdateLog = ulog.make_log(log_capacity)
         self._high_watermark = float(high_watermark)
@@ -116,7 +138,13 @@ class GraphService:
                  num_blocks: Optional[int] = None, block_width: int = 32,
                  **kw) -> "GraphService":
         if num_blocks is None:
-            num_blocks = max(64, 2 * len(src) // block_width + num_vertices // 4)
+            # provision by the actual per-vertex ceil-block demand:
+            # build_from_coo silently drops chains past its capacity (the
+            # vertex table would claim edges the store never placed), and a
+            # low-degree-heavy graph needs ~one block per live vertex no
+            # matter how few edges it has
+            demand = blocks_needed(src, num_vertices, block_width)
+            num_blocks = max(64, demand + demand // 2 + num_vertices // 8)
         cbl = build_from_coo(jnp.asarray(src), jnp.asarray(dst),
                              None if w is None else jnp.asarray(w),
                              num_vertices=num_vertices, num_blocks=num_blocks,
@@ -206,7 +234,10 @@ class GraphService:
             net_deletes = 0
 
         # proactive grow: worst case every pending insert opens a block
-        action = maint.decide(cbl, pending_inserts=n_ins, policy=self._policy)
+        # (headroom only — this call never acts on rebuild/compact, so it
+        # must not pay their full-store statistic scans)
+        action = maint.decide(cbl, pending_inserts=n_ins, policy=self._policy,
+                              headroom_only=True)
         if action.kind == "grow":
             cbl = maint.apply_action(cbl, action, self._policy)
             self.stats.grows += 1
@@ -235,7 +266,7 @@ class GraphService:
             cbl = maint.apply_action(
                 cbl, MaintenanceAction(
                     kind="grow", reason=f"overflow: {dropped} dropped",
-                    num_blocks=cbl.store.num_blocks * self._policy.grow_factor),
+                    num_blocks=_num_blocks(cbl) * self._policy.grow_factor),
                 self._policy)
             grow_retries += 1
             self.stats.grows += 1

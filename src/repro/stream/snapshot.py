@@ -24,7 +24,8 @@ from repro.graph.sampler import SampledGraph, sample_subgraph
 
 
 class Snapshot(NamedTuple):
-    cbl: CBList
+    cbl: CBList           # or a distributed.graph.ShardedCBList — both expose
+                          # the vertex-table surface the read paths consume
     epoch: jax.Array      # i32[] version counter (bumps per flush/maintenance)
     watermark: jax.Array  # i32[] log sequence applied into this version
 
@@ -48,7 +49,10 @@ def advance(snap: Snapshot, cbl: CBList, watermark: jax.Array) -> Snapshot:
 
 def query_edges(snap: Snapshot, qsrc: jax.Array, qdst: jax.Array
                 ) -> Tuple[jax.Array, jax.Array]:
-    """Batched read_edge(src, dst) -> (found, weight) as of the watermark."""
+    """Batched read_edge(src, dst) -> (found, weight) as of the watermark.
+
+    ``read_edges`` dispatches on the storage type, so sharded snapshots
+    serve the same API."""
     return read_edges(snap.cbl, qsrc, qdst)
 
 

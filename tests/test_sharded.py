@@ -1,0 +1,346 @@
+"""ShardedCBList: placement, shard_map compute equivalence, sharded serving.
+
+Device-count agnostic: the shard mesh axis is the largest divisor of
+``n_shards`` that fits ``jax.devices()`` and the shard_map body vmaps over
+its local stack — so these tests exercise the identical code path on 1 CPU
+device and on 8 forced host devices (the CI multi-device job runs this file
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_from_coo, to_coo
+from repro.core.engine import (in_degrees, process_edge_pull,
+                               process_edge_push, process_edge_push_feat)
+from repro.core.traversal import (make_placement_plan, partition_balance,
+                                  vertex_table_partition)
+from repro.core.tuner import choose_plan
+from repro.distributed.graph import (cut_fraction, halo_masks, shard_at,
+                                     shard_cbl, unshard)
+from repro.graph.algorithms import bfs, connected_components, pagerank, sssp
+from repro.graph.sampler import sample_subgraph
+from repro.stream import GraphService
+
+BW = 8
+
+
+@pytest.fixture(scope="module")
+def graph():
+    rng = np.random.default_rng(7)
+    NV, E = 60, 420
+    src = rng.integers(0, NV, E)
+    dst = rng.integers(0, NV, E)
+    pairs = sorted(set(zip(src.tolist(), dst.tolist())))
+    src = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    dst = jnp.asarray([p[1] for p in pairs], jnp.int32)
+    w = jnp.asarray(rng.random(len(src)).astype(np.float32) + 0.1)
+    cbl = build_from_coo(src, dst, w, num_vertices=NV, num_blocks=128,
+                         block_width=BW)
+    return NV, src, dst, w, cbl
+
+
+def edge_set(cbl, cap=4096):
+    s, d, w, v = (np.asarray(a) for a in to_coo(cbl, cap))
+    return {(int(a), int(b), round(float(c), 5))
+            for a, b, c, ok in zip(s, d, w, v) if ok}
+
+
+# ---------------------------------------------------------------------------
+# placement plan
+# ---------------------------------------------------------------------------
+
+def test_placement_plan_block_balanced(graph):
+    NV, src, dst, w, cbl = graph
+    plan = make_placement_plan(cbl, 4)
+    per = np.asarray(plan.blocks_per_shard)
+    assert per.sum() == int((np.asarray(cbl.store.owner) != -1).sum())
+    # block-balanced: no shard holds more than mean + the largest chain
+    max_chain = int(np.asarray(cbl.v_level).max())
+    assert per.max() <= per.mean() + max_chain
+    # vertex_shard is the contiguous-bounds map
+    vs = np.asarray(plan.vertex_shard)
+    for k in range(4):
+        lo, hi = plan.vertex_bounds[k], plan.vertex_bounds[k + 1]
+        assert (vs[lo:hi] == k).all()
+
+
+def test_placement_halo_is_cross_cut_dsts(graph):
+    NV, src, dst, w, cbl = graph
+    plan = make_placement_plan(cbl, 3, with_halo=True)
+    assert make_placement_plan(cbl, 3).halo is None   # opt-in only
+    vs = np.asarray(plan.vertex_shard)
+    halo = np.asarray(plan.halo)
+    s_np, d_np = np.asarray(src), np.asarray(dst)
+    expect = np.zeros_like(halo)
+    expect[vs[s_np][vs[s_np] != vs[d_np]], d_np[vs[s_np] != vs[d_np]]] = True
+    assert (halo == expect).all()
+
+
+def test_shard_roundtrip_preserves_edges(graph):
+    NV, src, dst, w, cbl = graph
+    for S in (1, 3):
+        scbl, _ = shard_cbl(cbl, S)
+        assert edge_set(unshard(scbl)) == edge_set(cbl)
+        # current halo/cut stats agree with the build-time plan
+        assert 0.0 <= float(cut_fraction(scbl)) <= 1.0
+        hm = np.asarray(halo_masks(scbl))
+        assert hm.shape == (S, cbl.capacity_vertices)
+
+
+def test_shard_local_views_have_global_ids(graph):
+    NV, src, dst, w, cbl = graph
+    scbl, plan = shard_cbl(cbl, 3)
+    vs = np.asarray(plan.vertex_shard)
+    deg = np.asarray(cbl.v_deg)
+    for k in range(3):
+        local = shard_at(scbl, k)
+        ld = np.asarray(local.v_deg)
+        assert (ld[vs != k] == 0).all()          # only owned chains
+        assert (ld[vs == k] == deg[vs == k]).all()   # at global positions
+
+
+# ---------------------------------------------------------------------------
+# shard_map sweep equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_push_pull_feat_equivalence(graph, n_shards):
+    NV, src, dst, w, cbl = graph
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.random(NV).astype(np.float32))
+    xf = jnp.asarray(rng.random((NV, 4)).astype(np.float32))
+    scbl, _ = shard_cbl(cbl, n_shards)
+    np.testing.assert_allclose(process_edge_push(scbl, x),
+                               process_edge_push(cbl, x), atol=1e-5)
+    np.testing.assert_allclose(process_edge_pull(scbl, x),
+                               process_edge_pull(cbl, x), atol=1e-5)
+    np.testing.assert_allclose(process_edge_push_feat(scbl, xf),
+                               process_edge_push_feat(cbl, xf), atol=1e-4)
+    # min/max combine is exact (identity fill + pmin/pmax)
+    for combine in ("min", "max"):
+        a = process_edge_push(cbl, x, combine=combine)
+        b = process_edge_push(scbl, x, combine=combine)
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert np.array_equal(np.asarray(in_degrees(scbl)),
+                          np.asarray(in_degrees(cbl)))
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_algorithms_equivalence(graph, n_shards):
+    NV, src, dst, w, cbl = graph
+    scbl, _ = shard_cbl(cbl, n_shards)
+    np.testing.assert_allclose(pagerank(scbl, max_iters=10),
+                               pagerank(cbl, max_iters=10), atol=1e-5)
+    assert np.array_equal(np.asarray(bfs(scbl, jnp.int32(0))),
+                          np.asarray(bfs(cbl, jnp.int32(0))))
+    assert np.array_equal(np.asarray(connected_components(scbl)),
+                          np.asarray(connected_components(cbl)))
+    np.testing.assert_allclose(sssp(scbl, jnp.int32(1)),
+                               sssp(cbl, jnp.int32(1)), atol=1e-5)
+
+
+def test_sharded_pallas_interpret_matches(graph):
+    NV, src, dst, w, cbl = graph
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.random(NV).astype(np.float32))
+    scbl, _ = shard_cbl(cbl, 2)
+    np.testing.assert_allclose(
+        process_edge_push(scbl, x, impl="pallas_interpret"),
+        process_edge_push(cbl, x), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# tuner: cut fraction exposed + decision term
+# ---------------------------------------------------------------------------
+
+def test_choose_plan_exposes_cut_fraction(graph):
+    NV, src, dst, w, cbl = graph
+    plan1 = choose_plan(cbl, "scan_all")
+    assert plan1.n_shards == 1 and plan1.cut_fraction == 0.0
+    assert 0.0 <= plan1.contiguity <= 1.0
+    scbl, _ = shard_cbl(cbl, 4)
+    plan4 = choose_plan(scbl, "scan_all")
+    assert plan4.n_shards == 4
+    assert 0.0 < plan4.cut_fraction <= 1.0
+    # a remote message is a bigger C_m: with full contiguity the single
+    # graph is all_hard, the sharded one must not be *more* hardware-happy
+    assert plan4.contiguity <= 1.0
+
+
+def test_service_plan_on_sharded_storage(graph):
+    NV, src, dst, w, cbl = graph
+    svc = GraphService(cbl, n_shards=2, log_capacity=128)
+    plan = svc.plan("scan_all")
+    assert plan.n_shards == 2
+    assert plan.cut_fraction > 0.0
+
+
+# ---------------------------------------------------------------------------
+# sharded serving loop (flush routes to owning shards)
+# ---------------------------------------------------------------------------
+
+def test_service_flush_query_matches_single(graph):
+    NV, src, dst, w, cbl = graph
+    rng = np.random.default_rng(11)
+    mk = lambda S: GraphService.from_coo(
+        np.asarray(src), np.asarray(dst), np.asarray(w), num_vertices=NV,
+        block_width=BW, log_capacity=256, n_shards=S)
+    ref, sh = mk(1), mk(2)
+    for _ in range(2):
+        us = rng.integers(0, NV, 24).astype(np.int32)
+        ud = rng.integers(0, NV, 24).astype(np.int32)
+        uw = rng.random(24).astype(np.float32) + 0.1
+        op = np.where(rng.random(24) < 0.3, -1, 1).astype(np.int32)
+        ref.apply(us, ud, uw, op)
+        sh.apply(us, ud, uw, op)
+        r1, r2 = ref.flush(), sh.flush()
+        assert r1.applied_inserts == r2.applied_inserts
+        assert r1.applied_deletes == r2.applied_deletes
+        qs = rng.integers(0, NV, 40).astype(np.int32)
+        qd = rng.integers(0, NV, 40).astype(np.int32)
+        f1, w1 = ref.query_edges(qs, qd)
+        f2, w2 = sh.query_edges(qs, qd)
+        assert np.array_equal(np.asarray(f1), np.asarray(f2))
+        np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=1e-6)
+        assert np.array_equal(np.asarray(ref.query_degrees(np.arange(NV))),
+                              np.asarray(sh.query_degrees(np.arange(NV))))
+        np.testing.assert_allclose(np.asarray(ref.analytics("pagerank")),
+                                   np.asarray(sh.analytics("pagerank")),
+                                   atol=1e-5)
+
+
+def test_service_rejects_shard_count_mismatch(graph):
+    NV, src, dst, w, cbl = graph
+    scbl, _ = shard_cbl(cbl, 2)
+    with pytest.raises(ValueError, match="already\nsharded|already sharded"):
+        GraphService(scbl, n_shards=8)
+    svc = GraphService(scbl)                       # n_shards=1 keeps as-is
+    assert svc.plan("scan_all").n_shards == 2
+
+
+def test_service_sharded_grow_retry_loss_free():
+    rng = np.random.default_rng(2)
+    NV = 32
+    svc = GraphService.from_coo(
+        np.array([0, 1], np.int32), np.array([1, 2], np.int32), None,
+        num_vertices=NV, num_blocks=16, block_width=BW,
+        log_capacity=512, n_shards=2)
+    us = rng.integers(0, NV, 256).astype(np.int32)
+    ud = rng.integers(0, NV, 256).astype(np.int32)
+    svc.apply(us, ud, None, None)
+    svc.flush()
+    found, _ = svc.query_edges(us, ud)
+    assert bool(np.asarray(found).all())          # loss-free despite overflow
+    assert svc.stats.grows >= 1
+
+
+def test_sharded_khop_edges_exist(graph):
+    NV, src, dst, w, cbl = graph
+    svc = GraphService(cbl, n_shards=3, log_capacity=64)
+    sg = svc.sample_khop(np.arange(8, dtype=np.int32), jax.random.PRNGKey(0),
+                         fanout=(4, 3))
+    ok = np.asarray(sg.valid)
+    assert ok.sum() > 0
+    s, d = np.asarray(sg.src)[ok], np.asarray(sg.dst)[ok]
+    found, _ = svc.query_edges(s, d)
+    assert bool(np.asarray(found).all())
+
+
+# ---------------------------------------------------------------------------
+# satellite fixes
+# ---------------------------------------------------------------------------
+
+def test_vertex_table_partition_covers_live_only():
+    """Streams must split n_vertices (live), not the table capacity."""
+    src = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    dst = jnp.asarray([1, 2, 3, 0], jnp.int32)
+    cbl = build_from_coo(src, dst, None, num_vertices=8, num_blocks=16,
+                         block_width=4, vertex_capacity=64)
+    part = vertex_table_partition(cbl, 4)
+    assert int(part.stops[-1]) == 8               # not 64
+    # every stream covers live vertices -> balance statistic is meaningful
+    bal = float(partition_balance(cbl, part))
+    assert bal <= 4.0
+
+
+def test_sampler_no_phantom_edges_from_reset_lanes():
+    """Invalid lanes parked at vertex 0 must not re-emit valid edges."""
+    # vertex 0 has high degree; vertex 5 is isolated
+    src = jnp.asarray([0, 0, 0, 0, 1, 2], jnp.int32)
+    dst = jnp.asarray([1, 2, 3, 4, 0, 0], jnp.int32)
+    cbl = build_from_coo(src, dst, None, num_vertices=8, num_blocks=16,
+                         block_width=4)
+    seeds = jnp.asarray([5], jnp.int32)           # isolated: no valid hop-1
+    sg = sample_subgraph(cbl, seeds, jax.random.PRNGKey(0), fanout=(3, 3))
+    # before the validity carry, hop 2 sampled vertex 0's real neighbors
+    # and emitted them as valid=True — phantoms rooted at a dead lane
+    assert int(np.asarray(sg.valid).sum()) == 0
+
+
+def test_update_entry_points_dispatch_on_sharded(graph):
+    """Every core update/read entry point accepts a ShardedCBList."""
+    from repro.core import (add_vertices, batch_update, delete_vertices,
+                            read_edges, upsert_edges)
+    NV, src, dst, w, cbl = graph
+    scbl, _ = shard_cbl(cbl, 3)
+
+    us = jnp.asarray([3, 7, 11, 3], jnp.int32)
+    ud = jnp.asarray([9, 1, 2, 9], jnp.int32)
+    uw = jnp.asarray([1.0, 2.0, 3.0, 4.0], jnp.float32)
+    op = jnp.asarray([1, 1, -1, -1], jnp.int32)
+    a = batch_update(cbl, us, ud, uw, op)
+    b = batch_update(scbl, us, ud, uw, op)
+    assert edge_set(unshard(b)) == edge_set(a)
+
+    a = upsert_edges(cbl, us, ud, uw)
+    b = upsert_edges(scbl, us, ud, uw)
+    assert edge_set(unshard(b)) == edge_set(a)
+    fa, wa = read_edges(a, us, ud)
+    fb, wb = read_edges(b, us, ud)
+    assert np.array_equal(np.asarray(fa), np.asarray(fb))
+    np.testing.assert_allclose(np.asarray(wa), np.asarray(wb), atol=1e-6)
+
+    vics = jnp.asarray([3, 9], jnp.int32)
+    a = delete_vertices(a, vics)
+    b = delete_vertices(b, vics)
+    assert edge_set(unshard(b)) == edge_set(a)
+    assert np.array_equal(np.asarray(a.v_deg), np.asarray(b.v_deg))
+
+    b2 = add_vertices(b, 2)
+    assert int(b2.n_vertices) == int(b.n_vertices) + 2
+
+
+def test_shard_cbl_rejects_inconsistent_source():
+    """A build that silently dropped chains (num_blocks < demand) must be
+    refused — sharding it would rebuild from partial storage and diverge
+    from the (phantom) vertex-table degrees."""
+    rng = np.random.default_rng(0)
+    src = jnp.asarray(rng.integers(0, 64, 256), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, 64, 256), jnp.int32)
+    bad = build_from_coo(src, dst, None, num_vertices=64, num_blocks=16,
+                         block_width=4)                # demand >> 16 blocks
+    with pytest.raises(ValueError, match="silently dropped"):
+        shard_cbl(bad, 2)
+
+
+def test_service_from_coo_provisions_by_demand():
+    """Low-degree-heavy graphs need ~a block per live vertex; the default
+    sizing must cover the ceil demand so no edge is silently dropped."""
+    rng = np.random.default_rng(4)
+    NV = 300
+    src = np.repeat(np.arange(NV, dtype=np.int32), 2)  # every vertex deg 2
+    dst = rng.integers(0, NV, 2 * NV).astype(np.int32)
+    svc = GraphService.from_coo(src, dst, None, num_vertices=NV,
+                                block_width=32, log_capacity=64)
+    found, _ = svc.query_edges(src, dst)
+    assert bool(np.asarray(found).all())
+    assert int(np.asarray(svc.snapshot.cbl.num_edges)) == 2 * NV
+
+
+def test_sampler_valid_edges_still_sampled(graph):
+    NV, src, dst, w, cbl = graph
+    sg = sample_subgraph(cbl, jnp.arange(8, dtype=jnp.int32),
+                         jax.random.PRNGKey(1), fanout=(5, 3))
+    assert int(np.asarray(sg.valid).sum()) > 0
