@@ -9,9 +9,12 @@ from repro.core.cblist import (CBList, block_fences, build_from_coo,
 from repro.core.updates import (DELETE, INSERT, NOP, UpdateStats, add_vertices,
                                 batch_update, batch_update_stats,
                                 delete_vertices, read_edges, upsert_edges)
-from repro.core.engine import (in_degrees, out_degrees, process_edge_pull,
-                               process_edge_push, process_edge_push_feat,
-                               process_vertex)
+from repro.core.engine import (SEMIRINGS, Semiring, in_degrees, out_degrees,
+                               process_edge_pull, process_edge_push,
+                               process_edge_push_feat, process_vertex)
+from repro.core.program import (ProgramContext, Sweep, VertexProgram,
+                                get_program, has_program, register_program,
+                                registered_programs, run_program)
 from repro.core.traversal import (Partition, PlacementPlan, gtchain_partition,
                                   lane_mask, make_placement_plan,
                                   partition_balance, scan_edges, scan_vertices,

@@ -33,6 +33,7 @@ Pick ``impl`` per graph/backend with :func:`repro.core.tuner.choose_plan`.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Callable, Optional
 
@@ -48,11 +49,34 @@ try:
 except Exception:   # Pallas-less JAX build: the XLA oracle stays importable
     gather_rows = segment_matmul = None
 
-COMBINERS = {
-    "sum": jax.ops.segment_sum,
-    "min": jax.ops.segment_min,
-    "max": jax.ops.segment_max,
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """One combine semiring, everywhere it is spent.
+
+    A :class:`~repro.core.program.VertexProgram` declares its combine by
+    name; this record is the single place that name is mapped onto compute:
+    the masked-lane identity fill, the flat segment reduction (the XLA
+    oracle), the dense per-axis reduction (per-block pull / shard-stack
+    merges), and the cross-shard collective that reconciles partial sweep
+    outputs across the cut (:mod:`repro.distributed.graph`).
+    """
+    name: str
+    fill: float                  # identity element (masked lanes, pads)
+    segment_reduce: Callable     # jax.ops.segment_* over flat lanes
+    lane_reduce: Callable        # jnp reduction along an axis
+    collective: Callable         # jax.lax.psum / pmin / pmax across shards
+
+
+SEMIRINGS = {
+    "sum": Semiring("sum", 0.0, jax.ops.segment_sum, jnp.sum, jax.lax.psum),
+    "min": Semiring("min", float("inf"), jax.ops.segment_min, jnp.min,
+                    jax.lax.pmin),
+    "max": Semiring("max", float("-inf"), jax.ops.segment_max, jnp.max,
+                    jax.lax.pmax),
 }
+
+COMBINERS = {k: s.segment_reduce for k, s in SEMIRINGS.items()}
 
 # shared default edge functions: one object per semantic so the dispatching
 # wrappers and the jitted implementations hit the same jit cache entry
@@ -142,13 +166,11 @@ def _process_edge_push(cbl: CBList, x: jax.Array,
         mask = mask & active[owner_safe][:, None]
     msg = dense_f(xs[:, None], st.vals)                  # [NB, B]
     seg = jnp.where(mask, st.keys, nv)                   # PAD/out-of-range drop
+    sr = SEMIRINGS[combine]
+    msg = jnp.where(mask, msg, sr.fill)
     if combine == "sum":
-        msg = jnp.where(mask, msg, 0.0)
         return _segment_sum(msg.ravel(), seg.ravel(), nv, impl)
-    fill = jnp.inf if combine == "min" else -jnp.inf
-    msg = jnp.where(mask, msg, fill)
-    out = COMBINERS[combine](msg.ravel(), seg.ravel(), num_segments=nv)
-    return out
+    return sr.segment_reduce(msg.ravel(), seg.ravel(), num_segments=nv)
 
 
 def process_edge_pull(cbl, x: jax.Array,
@@ -188,14 +210,12 @@ def _process_edge_pull(cbl: CBList, x: jax.Array,
         mask = mask & active_dst[dst_safe]
     msg = dense_f(xd, st.vals)
     owner_seg = jnp.where(st.owner == NULL, nv, st.owner)
+    sr = SEMIRINGS[combine]
+    msg = jnp.where(mask, msg, sr.fill)
+    per_blk = sr.lane_reduce(msg, axis=1)
     if combine == "sum":
-        msg = jnp.where(mask, msg, 0.0)
-        per_blk = msg.sum(axis=1)
         return _segment_sum(per_blk, owner_seg, nv, impl)
-    fill = jnp.inf if combine == "min" else -jnp.inf
-    msg = jnp.where(mask, msg, fill)
-    per_blk = msg.min(axis=1) if combine == "min" else msg.max(axis=1)
-    return COMBINERS[combine](per_blk, owner_seg, num_segments=nv)
+    return sr.segment_reduce(per_blk, owner_seg, num_segments=nv)
 
 
 def process_edge_push_feat(cbl, x: jax.Array,

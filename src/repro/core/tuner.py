@@ -78,17 +78,21 @@ def choose_lookahead(probe: SystemProbe, block_bytes: int) -> int:
     return int(max(2, min(need, probe.max_lookahead, cap_vmem)))
 
 
-def choose_plan(cbl, task: str, probe: Optional[SystemProbe] = None,
+def choose_plan(cbl, task, probe: Optional[SystemProbe] = None,
                 on_tpu: Optional[bool] = None) -> ExecPlan:
     """Execution strategy tuner (paper Fig. 8).
 
-    ``task``: "scan_all" (PageRank/CC/LP dense sweeps), "frontier"
-    (BFS/SSSP sparse steps), "query" (read_edge), "batch_update".
+    ``task``: a :class:`~repro.core.program.VertexProgram` (the plan keys
+    on its ``task`` metadata — execution strategy chosen per workload
+    *property*, not per hand-written driver) or a raw task string:
+    "scan_all" (dense sweeps), "frontier" (sparse relaxation steps),
+    "query" (read_edge), "batch_update".
     ``on_tpu`` defaults to backend autodetection.  Accepts a CBList or a
     :class:`~repro.distributed.graph.ShardedCBList`; sharded plans report
     the cut fraction (remote-message share) alongside contiguity so bench
     output can correlate plan choices with shard scaling.
     """
+    task = getattr(task, "task", task)       # VertexProgram -> its metadata
     probe = probe or SystemProbe()
     if on_tpu is None:
         on_tpu = jax.default_backend() == "tpu"
@@ -146,11 +150,12 @@ def choose_plan(cbl, task: str, probe: Optional[SystemProbe] = None,
     return plan
 
 
-def choose_engine_impl(cbl, task: str = "scan_all",
+def choose_engine_impl(cbl, task="scan_all",
                        probe: Optional[SystemProbe] = None,
                        backend: Optional[str] = None) -> str:
     """The ``impl=`` to pass to ``process_edge_push/pull/push_feat``.
 
+    ``task`` may be a VertexProgram (metadata-keyed) or a task string.
     Resolves outside jit (reads concrete contiguity stats); pass the result
     into the jitted sweeps as the static ``impl`` argument.
     """

@@ -21,6 +21,12 @@ combined by one cross-shard collective:
   * ``min/max`` — ``pmin`` / ``pmax`` (the identity fill of the local
     segment ops makes non-owned entries neutral).
 
+The semiring → collective mapping is the :data:`repro.core.engine.SEMIRINGS`
+table — the same record a :class:`~repro.core.program.VertexProgram`
+declares its combine with, so a program's semiring choice carries through
+single-device sweeps, shard-stack merges, and the cross-cut collective
+from one declaration.
+
 Because each shard's edge set is disjoint and covers the graph, the
 combined result equals the single-device sweep exactly (bit-for-bit for
 min/max and integer frontiers; up to summation order for float sums).
@@ -53,7 +59,7 @@ from repro.core.blockstore import NULL
 from repro.core.cblist import CBList, build_from_coo, compact_cbl, to_coo
 from repro.core.cblist import grow as grow_cbl
 from repro.core.cblist import rebuild as rebuild_cbl
-from repro.core.engine import _DEFAULT_EDGE_F
+from repro.core.engine import _DEFAULT_EDGE_F, SEMIRINGS
 from repro.core.traversal import PlacementPlan, lane_mask, make_placement_plan
 from repro.core.updates import (NOP, UpdateStats, _batch_update_stats,
                                 _delete_vertices, _read_edges, _upsert_edges)
@@ -275,11 +281,18 @@ def halo_masks(scbl: ShardedCBList) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def _cross_shard_combine(local, combine: str, axis_size: int, tile_dim: int):
-    """Reduce one shard's partial sweep output across the mesh axis."""
-    if combine == "min":
-        return jax.lax.pmin(local, "shard")
-    if combine == "max":
-        return jax.lax.pmax(local, "shard")
+    """Reduce one shard's partial sweep output across the mesh axis.
+
+    The semiring declared by the program (via the sweep's ``combine``) maps
+    directly onto the collective: idempotent lattices (min/max) are one
+    ``pmin``/``pmax``, and only the sum semiring earns the segment-reduce
+    optimization (``psum_scatter`` + ``all_gather`` — each shard reduces
+    its owned slice of the remote messages) when the vertex capacity tiles
+    the mesh axis.
+    """
+    sr = SEMIRINGS[combine]
+    if sr.collective is not jax.lax.psum:
+        return sr.collective(local, "shard")
     scatter_ok = (axis_size > 1 and tile_dim % axis_size == 0
                   and REDUCE_MODE in ("auto", "reduce_scatter"))
     if scatter_ok:
@@ -297,14 +310,10 @@ def _sharded_sweep(scbl: ShardedCBList, x: jax.Array, active, sweep: Callable,
     the way down so the per-shard sweep keeps its unmasked fast path."""
     mesh = scbl.mesh
     axis_size = mesh.shape["shard"]
+    sr = SEMIRINGS[combine]
 
     def _local_combine(part):
-        if combine == "sum":
-            local = part.sum(axis=0)
-        elif combine == "min":
-            local = part.min(axis=0)
-        else:
-            local = part.max(axis=0)
+        local = sr.lane_reduce(part, axis=0)
         return _cross_shard_combine(local, combine, axis_size, local.shape[0])
 
     if active is None:

@@ -1,6 +1,14 @@
-"""Graph analytics + sampling on the CBList engine."""
-from repro.graph.algorithms import (bfs, connected_components, incremental_bfs,
-                                    incremental_cc, incremental_pagerank,
-                                    incremental_sssp, label_propagation,
-                                    pagerank, sssp, triangle_count)
+"""Graph analytics + sampling on the CBList engine.
+
+Every workload is a :class:`~repro.core.program.VertexProgram` executed by
+:func:`~repro.core.program.run_program`; the classic driver functions are
+thin wrappers kept for their signatures.
+"""
+from repro.graph.algorithms import (BFS, CONNECTED_COMPONENTS,
+                                    LABEL_PROPAGATION, PAGERANK, SSSP,
+                                    TRIANGLE_COUNT, bfs, connected_components,
+                                    incremental_bfs, incremental_cc,
+                                    incremental_pagerank, incremental_sssp,
+                                    label_propagation, pagerank, sssp,
+                                    triangle_count)
 from repro.graph.sampler import SampledGraph, sample_subgraph

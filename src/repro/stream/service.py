@@ -25,9 +25,13 @@ Division of labor (host orchestration / device compute, the same split as
     the service never loses an admitted edge;
   * the :mod:`~repro.stream.maintenance` policy then schedules
     compact/rebuild/grow from the storage statistics;
-  * readers hold :class:`~repro.stream.snapshot.Snapshot` versions; the
-    analytics cache warm-starts the ``incremental_*`` drivers from the last
-    fixpoint and routes engine sweeps through the tuner's per-task plan.
+  * readers hold :class:`~repro.stream.snapshot.Snapshot` versions;
+    analytics dispatch through the :mod:`repro.core.program` registry — one
+    ``run_program`` executor for every workload — with per-epoch caching,
+    warm starts from the last fixpoint (gated by each program's
+    ``warm_validity``), and engine sweeps routed through the tuner's plan
+    keyed on program metadata.  :meth:`GraphService.register_program` opens
+    user-defined workloads to the same loop.
 """
 from __future__ import annotations
 
@@ -37,11 +41,15 @@ from typing import Dict, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core.cblist import CBList, blocks_needed, build_from_coo
+from repro.core.program import (VertexProgram, get_program, has_program,
+                                run_program)
 from repro.core.tuner import SystemProbe, choose_engine_impl, choose_plan
 from repro.core.updates import (DELETE, INSERT, NOP, batch_update_stats,
                                 read_edges)
-from repro.graph import algorithms as alg
+from repro.graph import algorithms as _builtin_programs  # noqa: F401 — registers the built-in VertexPrograms
 from repro.stream import log as ulog
 from repro.stream import maintenance as maint
 from repro.stream import snapshot as snap
@@ -58,17 +66,32 @@ def _num_blocks(cbl) -> int:
     (CBList vs ShardedCBList) inside repro.core.updates."""
     return cbl.store.num_blocks if isinstance(cbl, CBList) else cbl.num_blocks
 
-# neutral warm-start values for vertices added by a capacity grow: each is
-# the "unknown" element of the matching incremental driver's lattice
-_WARM_FILL = {"pagerank": 0.0, "bfs": -1, "sssp": jnp.inf, "cc": -1}
 
-
-def _pad_warm(warm: jax.Array, capacity: int, name: str) -> jax.Array:
-    """Pad a cached fixpoint to the post-grow vertex capacity."""
-    if warm.shape[0] >= capacity:
+def _pad_warm(warm: jax.Array, capacity: int, fill) -> jax.Array:
+    """Pad a cached fixpoint to the post-grow vertex capacity with the
+    program's declared "unknown" lattice element.  Axis 0 is the vertex
+    axis whatever the output rank (scalar outputs pass through)."""
+    if warm.ndim == 0 or warm.shape[0] >= capacity:
         return warm
-    pad = jnp.full((capacity - warm.shape[0],), _WARM_FILL[name], warm.dtype)
+    pad = jnp.full((capacity - warm.shape[0],) + warm.shape[1:], fill,
+                   warm.dtype)
     return jnp.concatenate([warm, pad])
+
+
+def _kw_match(a: dict, b: dict) -> bool:
+    """Cache-parameter equality that tolerates array-valued parameters
+    (e.g. label_propagation's seed vectors)."""
+    if a.keys() != b.keys():
+        return False
+    for k, va in a.items():
+        vb = b[k]
+        if isinstance(va, (jax.Array, np.ndarray)) or \
+                isinstance(vb, (jax.Array, np.ndarray)):
+            if not np.array_equal(np.asarray(va), np.asarray(vb)):
+                return False
+        elif va != vb:
+            return False
+    return True
 
 
 class FlushReport(NamedTuple):
@@ -131,7 +154,8 @@ class GraphService:
         self.stats = ServiceStats()
         # analytics cache: (name, source) -> (epoch, delete_count, kw, result)
         self._cache: Dict[Tuple, Tuple[int, int, dict, jax.Array]] = {}
-        self._deletes_applied = 0     # net topology removals (CC split signal)
+        self._deletes_applied = 0     # net topology removals (lattice-split signal)
+        self._programs: Dict[str, VertexProgram] = {}  # service-local registry
 
     @classmethod
     def from_coo(cls, src, dst, w=None, *, num_vertices: int,
@@ -296,64 +320,80 @@ class GraphService:
 
     # ---- incremental analytics -------------------------------------------
 
+    def register_program(self, prog: VertexProgram, *,
+                         overwrite: bool = False) -> VertexProgram:
+        """Open a user-defined :class:`~repro.core.program.VertexProgram`
+        to the full serving loop — snapshots, per-epoch caching, incremental
+        warm-start (honoring the program's ``warm_validity``), tuner plans,
+        and sharded execution — with no service changes.
+
+        The registration is service-local; it shadows a globally registered
+        program of the same name for this service only.
+        """
+        if not overwrite and (prog.name in self._programs
+                              or has_program(prog.name)):
+            raise ValueError(f"program {prog.name!r} is already registered "
+                             "(pass overwrite=True to shadow it)")
+        self._programs[prog.name] = prog
+        # cached fixpoints belong to the program that computed them: a
+        # same-epoch hit must not return the shadowed program's output, and
+        # a warm start must not feed it into the new program's warm_init
+        for key in [k for k in self._cache if k[0] == prog.name]:
+            del self._cache[key]
+        return prog
+
+    def _resolve_program(self, name: str) -> VertexProgram:
+        return self._programs.get(name) or get_program(name)
+
     def analytics(self, name: str, source: Optional[int] = None,
                   **kw) -> jax.Array:
         """Run (or incrementally refresh) an analytics workload.
 
-        ``name``: "pagerank" | "bfs" | "sssp" | "cc".  Results are cached
-        per (name, source) with the epoch they were computed at; a later
-        call on a newer epoch warm-starts the matching ``incremental_*``
-        driver from the cached fixpoint.  The engine ``impl`` comes from the
-        tuner's per-task plan ("scan_all" for dense sweeps, "frontier" for
-        BFS/SSSP).
+        ``name`` resolves through the program registry — the built-ins
+        ("pagerank", "bfs", "sssp", "cc", "label_propagation",
+        "triangle_count") plus anything added via
+        :meth:`register_program`.  Results are cached per (name, source)
+        with the epoch they were computed at; a later call on a newer epoch
+        warm-starts the program from the cached fixpoint when its
+        ``warm_validity`` allows it ("inserts_only" programs restart cold
+        once a flush applied net deletes).  The engine ``impl`` comes from
+        the tuner's plan keyed on the program's ``task`` metadata.
         """
+        prog = self._resolve_program(name)
         cbl = self._snap.cbl
         epoch = int(self._snap.epoch)
-        if name in ("bfs", "sssp"):
+        if prog.needs_source:
             source = 0 if source is None else int(source)  # one cache entry
+        else:
+            source = None
         key = (name, source)
         cached = self._cache.get(key)
         # a same-epoch hit must also have been computed with the same
         # parameters — a cheap preview must not shadow an accurate request
-        if cached is not None and cached[0] == epoch and cached[2] == kw:
+        if cached is not None and cached[0] == epoch \
+                and _kw_match(cached[2], kw):
             return cached[3]
 
-        task = "frontier" if name in ("bfs", "sssp") else "scan_all"
-        impl = choose_engine_impl(cbl, task, self._probe)
-        warm = cached[3] if cached is not None else None
-        if warm is not None:
-            warm = _pad_warm(warm, cbl.capacity_vertices, name)
-
-        if name == "pagerank":
-            if warm is not None:
-                out = alg.incremental_pagerank(cbl, warm, impl=impl, **kw)
-            else:
-                out = alg.pagerank(cbl, impl=impl, **kw)
-        elif name == "bfs":
-            src_v = jnp.int32(source)
-            if warm is not None:
-                out = alg.incremental_bfs(cbl, src_v, warm, impl=impl, **kw)
-            else:
-                out = alg.bfs(cbl, src_v, impl=impl, **kw)
-        elif name == "sssp":
-            src_v = jnp.int32(source)
-            if warm is not None:
-                out = alg.incremental_sssp(cbl, src_v, warm, impl=impl, **kw)
-            else:
-                out = alg.sssp(cbl, src_v, impl=impl, **kw)
-        elif name == "cc":
-            if warm is not None:
-                had_deletes = self._deletes_applied > cached[1]
-                out = alg.incremental_cc(cbl, warm, jnp.bool_(had_deletes),
-                                         impl=impl, **kw)
-            else:
-                out = alg.connected_components(cbl, impl=impl, **kw)
-        else:
-            raise ValueError(f"unknown analytics workload {name!r}")
+        impl = choose_engine_impl(cbl, prog, self._probe)
+        warm = None
+        if cached is not None and prog.warm_validity != "never":
+            if not (prog.warm_validity == "inserts_only"
+                    and self._deletes_applied > cached[1]):
+                warm = _pad_warm(cached[3], cbl.capacity_vertices,
+                                 prog.warm_fill)
+        call_kw = dict(kw)
+        if prog.needs_source:
+            call_kw["source"] = jnp.int32(source)
+        out = run_program(cbl, prog, warm=warm, impl=impl, **call_kw)
 
         self._cache[key] = (epoch, self._deletes_applied, dict(kw), out)
         return out
 
-    def plan(self, task: str = "scan_all"):
-        """The tuner's current execution plan for a task (introspection)."""
+    def plan(self, task="scan_all"):
+        """The tuner's current execution plan for a task or program
+        (introspection; accepts a task string, program name, or
+        VertexProgram)."""
+        if isinstance(task, str) and (task in self._programs
+                                      or has_program(task)):
+            task = self._resolve_program(task)
         return choose_plan(self._snap.cbl, task, self._probe)

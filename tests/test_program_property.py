@@ -1,0 +1,53 @@
+"""Hypothesis property test: a custom VertexProgram registered through
+``GraphService.register_program`` vs a numpy oracle through flush/snapshot
+cycles.
+
+The program (max-reachable-id: label[v] = max vertex id with a path to v)
+never touches service.py — caching, the ``inserts_only`` warm-start rule,
+and cold restarts after deletes all come from the program runtime.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
+
+from repro.stream import GraphService  # noqa: E402
+from test_program import (MAX_REACH, _matches_oracle,  # noqa: E402
+                          _snapshot_edges)
+
+PNV, PMAX_E = 20, 40
+_edges = st.lists(st.tuples(st.integers(0, PNV - 1), st.integers(0, PNV - 1)),
+                  min_size=1, max_size=PMAX_E, unique=True)
+_batch = st.lists(st.tuples(st.integers(0, PNV - 1), st.integers(0, PNV - 1),
+                            st.booleans()),
+                  min_size=1, max_size=16, unique_by=lambda t: t[:2])
+
+
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(edges=_edges, batches=st.lists(_batch, min_size=1, max_size=3))
+def test_custom_program_oracle_through_flush_cycles(edges, batches):
+    src = np.zeros(PMAX_E, np.int32)
+    dst = np.zeros(PMAX_E, np.int32)
+    for i, (a, b) in enumerate(edges):
+        src[i], dst[i] = a, b
+    # fixed num_blocks -> one jit trace across examples; generous so the
+    # random batches never force a grow (shape change = retrace)
+    svc = GraphService.from_coo(src[:len(edges)], dst[:len(edges)],
+                                num_vertices=PNV, num_blocks=256,
+                                block_width=4, log_capacity=256)
+    svc.register_program(MAX_REACH)
+    assert _matches_oracle(svc.analytics("max_reach"), PNV,
+                           _snapshot_edges(svc))
+    for batch in batches:
+        us = np.array([t[0] for t in batch], np.int32)
+        ud = np.array([t[1] for t in batch], np.int32)
+        op = np.array([1 if t[2] else 0 for t in batch], np.int32)
+        svc.apply(us, ud, None, op)
+        svc.flush()
+        # warm when the flush was inserts-only, cold after net deletes —
+        # either way the served labels must match the oracle exactly
+        assert _matches_oracle(svc.analytics("max_reach"), PNV,
+                               _snapshot_edges(svc))
