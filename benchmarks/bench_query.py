@@ -19,9 +19,19 @@ def run():
     rng = np.random.default_rng(3)
     qidx = rng.choice(E, size=max(E // 20, 256), replace=False)
     qs, qd = src[qidx], dst[qidx]
-    # half the queries miss
+    # half the queries miss — rejection-sampled true misses ((qd + 1) % nv
+    # can collide with a real edge, silently weakening the miss half and
+    # the cross-structure agreement check below)
+    edge_set = set(zip(np.asarray(src).tolist(), np.asarray(dst).tolist()))
+    qs_np = np.asarray(qs)
+    miss = np.asarray(qd).copy()
+    for i, a in enumerate(qs_np):
+        c = int(miss[i])
+        while (int(a), c) in edge_set:
+            c = int(rng.integers(0, nv))
+        miss[i] = c
     qs = jnp.concatenate([qs, qs])
-    qd = jnp.concatenate([qd, (qd + 1) % nv])
+    qd = jnp.concatenate([qd, jnp.asarray(miss)])
 
     cbl = build_cbl(nv, src, dst, w)
     t = time_fn(lambda: read_edges(cbl, qs, qd))
@@ -39,6 +49,9 @@ def run():
     f2, _ = B.csr_query(csr, qs, qd)
     f3, _ = B.al_query(al, qs, qd)
     assert bool(jnp.all(f == f2)) and bool(jnp.all(f == f3)), "result mismatch"
+    half = len(qidx)
+    assert bool(jnp.all(f[:half])), "hit half must all be found"
+    assert not bool(jnp.any(f[half:])), "miss half must all be true misses"
     return {"cblist": t, "csr": t_csr, "al": t_al}
 
 

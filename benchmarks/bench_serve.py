@@ -1,0 +1,151 @@
+"""Serving-frontend bench: QPS and latency vs dispatch window / bucket set.
+
+Replays a mixed multi-tenant trace (point reads, degree reads, updates)
+through :class:`repro.serve.ServeFrontend` on a virtual arrival timeline
+(Poisson at a target QPS, ``ManualClock``) for two dispatch-window /
+bucket-set configurations, reporting wall-clock QPS, virtual p50/p99
+latency, batch occupancy, and the jit-cache-size stat (distinct compiled
+bucket shapes per request kind — the recompile-storm canary).  A final
+row compares batched point-read throughput against an unbatched
+per-request loop at equal request count.
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import SCALE, dataset, emit
+from repro.core import DELETE, INSERT
+from repro.core.tuner import ServePlan
+from repro.serve import (DegreeRead, ManualClock, PointRead, ServeFrontend,
+                         UpdateBatch)
+from repro.stream import GraphService
+
+CONFIGS = (
+    ("tight", ServePlan(bucket_set=(32, 64, 128),
+                        windows={"interactive": 0.001, "standard": 0.004,
+                                 "batch": 0.020},
+                        flush_pending_max=1024, arrival_lanes_per_s=0.0)),
+    ("wide", ServePlan(bucket_set=(64, 128, 256, 512),
+                       windows={"interactive": 0.005, "standard": 0.020,
+                                "batch": 0.100},
+                       flush_pending_max=1024, arrival_lanes_per_s=0.0)),
+)
+
+
+def make_trace(nv, src, dst, n_requests, rng):
+    """(dt, request) pairs: Poisson arrivals at ~2000 virtual QPS, 60/20/20
+    point/degree/update mix across two tenants (one read-your-writes)."""
+    E = len(src)
+    kinds = rng.choice(3, size=n_requests, p=[0.6, 0.2, 0.2])
+    dts = rng.exponential(1.0 / 2000.0, size=n_requests)
+    trace = []
+    for k, dt in zip(kinds, dts):
+        size = int(rng.integers(4, 33))
+        tenant = "ryw" if rng.random() < 0.25 else "dash"
+        cls = "interactive" if rng.random() < 0.5 else "standard"
+        if k == 0:
+            i = rng.integers(0, E, size)
+            req = PointRead(qsrc=np.asarray(src)[i], qdst=np.asarray(dst)[i],
+                            tenant=tenant, latency_class=cls)
+        elif k == 1:
+            req = DegreeRead(verts=rng.integers(0, nv, size), tenant=tenant,
+                             latency_class=cls)
+        else:
+            req = UpdateBatch(src=rng.integers(0, nv, size),
+                              dst=rng.integers(0, nv, size),
+                              op=rng.choice([INSERT, DELETE], size,
+                                            p=[0.8, 0.2]),
+                              tenant=tenant, latency_class="batch")
+        trace.append((float(dt), req))
+    return trace
+
+
+def replay(svc, plan, trace):
+    clock = ManualClock()
+    front = ServeFrontend(svc, plan, clock=clock)
+    front.register_tenant("ryw", read_your_writes=True)
+    front.register_tenant("dash")
+    t0 = time.perf_counter()
+    for dt, req in trace:
+        clock.advance(dt)
+        front.submit(req)
+        front.step()
+    front.drain(flush=True)
+    wall = time.perf_counter() - t0
+    return front.report(), wall
+
+
+def run():
+    nv, src, dst, w = dataset("rmat_tiny")
+    rng = np.random.default_rng(0)
+    n_requests = max(int(3000 * SCALE), 400)
+    trace = make_trace(nv, src, dst, n_requests, rng)
+    summary = {"n_requests": n_requests, "configs": {}}
+
+    for name, plan in CONFIGS:
+        svc = GraphService.from_coo(src, dst, w, num_vertices=nv,
+                                    log_capacity=4096)
+        rep, wall = replay(svc, plan, trace)
+        lat = [c for t in rep["tenants"].values()
+               for c in t["by_class"].values()]
+        p50 = float(np.median([c["p50_ms"] for c in lat]))
+        p99 = float(max(c["p99_ms"] for c in lat))
+        qps = n_requests / wall
+        occ = {k: round(v["mean_occupancy"], 3)
+               for k, v in rep["kinds"].items()}
+        jit = {k: v["jit_cache_size"] for k, v in rep["kinds"].items()}
+        window_ms = plan.windows["standard"] * 1e3
+        emit(f"serve/replay_{name}", wall / n_requests,
+             f"qps={qps:.0f},p50_ms={p50:.2f},p99_ms={p99:.2f},"
+             f"jit={sum(jit.values())}")
+        for kind, size in jit.items():
+            assert size <= len(plan.bucket_set), \
+                f"recompile storm: {kind} compiled {size} shapes"
+        summary["configs"][name] = {
+            "dispatch_window_ms": {k: v * 1e3 for k, v in plan.windows.items()},
+            "bucket_set": list(plan.bucket_set),
+            "qps_wall": qps, "p50_ms": p50, "p99_ms": p99,
+            "virtual_window_standard_ms": window_ms,
+            "mean_occupancy": occ, "jit_cache_size": jit,
+            "flushes": rep["service"]["flushes"],
+            "epoch": rep["service"]["epoch"],
+        }
+
+    # batched frontend vs unbatched per-request loop, equal request count
+    point_reqs = [r for _, r in trace if isinstance(r, PointRead)]
+    svc = GraphService.from_coo(src, dst, w, num_vertices=nv,
+                                log_capacity=4096)
+    seen = set()
+    for req in point_reqs:                           # warm the loop's jit cache
+        if req.size not in seen:
+            seen.add(req.size)
+            svc.query_edges(req.qsrc, req.qdst)
+    t0 = time.perf_counter()
+    for req in point_reqs:
+        f, _ = svc.query_edges(req.qsrc, req.qdst)
+        f.block_until_ready()
+    t_loop = time.perf_counter() - t0
+    emit("serve/point_unbatched_loop", t_loop / len(point_reqs),
+         f"N={len(point_reqs)}")
+
+    svc = GraphService.from_coo(src, dst, w, num_vertices=nv,
+                                log_capacity=4096)
+    clock = ManualClock()
+    front = ServeFrontend(svc, CONFIGS[0][1], clock=clock)
+    t0 = time.perf_counter()
+    for req in point_reqs:
+        front.submit(req)
+    clock.advance(1.0)
+    front.drain()
+    t_batched = time.perf_counter() - t0
+    emit("serve/point_batched", t_batched / len(point_reqs),
+         f"vs_loop={t_loop / t_batched:.2f}x")
+    assert t_batched <= t_loop, \
+        "batched point reads slower than the unbatched per-request loop"
+    summary["point_read_speedup_batched_vs_loop"] = t_loop / t_batched
+    summary["point_read_requests"] = len(point_reqs)
+    return summary
+
+
+if __name__ == "__main__":
+    run()

@@ -11,6 +11,7 @@ REPRO_BENCH_SCALE (default 1.0; CI uses 0.25).
   serving layer (repro.stream) -> bench_stream
   graph sharding (repro.distributed.graph) -> bench_shard
   vertex-program runtime (repro.core.program) -> bench_program
+  request frontend (repro.serve) -> bench_serve
   §Roofline (dry-run derived) -> roofline (requires experiments/dryrun/)
 """
 import json
@@ -32,12 +33,13 @@ def _dump(short: str, rows, summary) -> None:
 
 def main() -> None:
     from benchmarks import (bench_analysis, bench_batchsize, bench_interleave,
-                            bench_program, bench_query, bench_shard,
-                            bench_stream, bench_update, common)
+                            bench_program, bench_query, bench_serve,
+                            bench_shard, bench_stream, bench_update, common)
     print("name,us_per_call,derived")
     ok = True
     for mod in (bench_query, bench_analysis, bench_update, bench_batchsize,
-                bench_interleave, bench_stream, bench_shard, bench_program):
+                bench_interleave, bench_stream, bench_shard, bench_program,
+                bench_serve):
         short = mod.__name__.split(".")[-1].removeprefix("bench_")
         start = len(common.ROWS)
         try:

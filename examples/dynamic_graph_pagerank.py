@@ -1,24 +1,28 @@
-"""End-to-end dynamic graph serving on GraphService (the paper's workload).
+"""End-to-end dynamic graph serving through the repro.serve frontend.
 
-A stream of edge-update batches flows through the ``repro.stream`` serving
-layer while incremental PageRank keeps analytics fresh: updates are admitted
-into the coalescing log, flushes publish epoch-versioned snapshots, and the
-maintenance scheduler compacts / rebuilds / grows storage from its watched
-statistics — the GastCoCo serving loop ("fraud detection on a live
-transaction graph") with every concern owned by the subsystem instead of
-hand-rolled here.
+The paper's headline scenario ("fraud detection on a live transaction
+graph") as multi-tenant traffic: a *fraud* tenant (read-your-writes:
+point reads must see its just-admitted transactions before any flush) and
+a *dashboard* tenant (snapshot reads + batch-class PageRank) share one
+:class:`ServeFrontend` over a :class:`GraphService`.  Requests coalesce
+into shape-bucketed micro-batches under per-class dispatch windows; the
+scheduler interleaves log admission, flushes, and maintenance with read
+serving, and the report shows per-tenant QPS / p50 / p99, batch occupancy,
+and the jit-cache-size stat (bounded by the bucket ladder).
 
   PYTHONPATH=src python examples/dynamic_graph_pagerank.py --batches 10
 """
 import argparse
+import json
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import gtchain_contiguity
+from repro.core.tuner import choose_serve_plan
 from repro.data import rmat_edges, update_stream
-from repro.stream import GraphService, MaintenancePolicy
+from repro.serve import (Analytics, DegreeRead, ManualClock, PointRead,
+                         ServeFrontend, UpdateBatch)
+from repro.stream import GraphService
 
 
 def main():
@@ -27,54 +31,61 @@ def main():
     ap.add_argument("--edges", type=int, default=16000)
     ap.add_argument("--batch", type=int, default=512)
     ap.add_argument("--batches", type=int, default=10)
-    ap.add_argument("--flush-every", type=int, default=1,
-                    help="apply N batches per flush (analytics staleness knob)")
-    ap.add_argument("--contiguity-floor", type=float, default=0.9)
+    ap.add_argument("--qps", type=float, default=2000.0,
+                    help="virtual arrival rate the serve plan is keyed on")
     args = ap.parse_args()
 
     src, dst = rmat_edges(args.vertices, args.edges, seed=0)
-    # num_blocks left to the service's demand-based default: the old
-    # edges//8 heuristic under-provisioned skewed graphs and build_from_coo
-    # silently dropped chains while v_deg still counted them
     service = GraphService.from_coo(
         src, dst, num_vertices=args.vertices, block_width=32,
-        log_capacity=max(4096, args.batch * 4),
-        policy=MaintenancePolicy(contiguity_floor=args.contiguity_floor))
-    ranks = service.analytics("pagerank", max_iters=50, tol=1e-9)
-    print(f"initial: {args.edges} edges, pagerank converged "
-          f"(epoch {service.epoch})")
+        log_capacity=max(4096, args.batch * 4))
+    plan = choose_serve_plan(args.qps, mean_lanes_per_request=16.0,
+                             log_capacity=service._log.capacity)
+    clock = ManualClock()
+    front = ServeFrontend(service, plan, clock=clock)
+    front.register_tenant("fraud", read_your_writes=True)
+    front.register_tenant("dashboard")
+    print(f"serve plan: buckets={plan.bucket_set} windows(ms)="
+          f"{ {k: round(v * 1e3, 1) for k, v in plan.windows.items()} }")
 
+    rng = np.random.default_rng(1)
     stream = update_stream(args.vertices, (src, dst), args.batch,
                            args.batches, seed=1)
-    t_updates, t_ranks = 0.0, 0.0
+    t0 = time.perf_counter()
+    ranks_ticket = None
     for i, (us, ud, uw, op) in enumerate(stream):
-        t0 = time.perf_counter()
-        receipt = service.apply(us, ud, uw, op)
-        if (i + 1) % args.flush_every == 0:
-            report = service.flush()
-        service.snapshot.cbl.v_deg.block_until_ready()
-        t_updates += time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        ranks = service.analytics("pagerank", max_iters=15, tol=1e-8)
-        ranks.block_until_ready()
-        t_ranks += time.perf_counter() - t0
-
+        # fraud tenant admits its transaction batch, then immediately reads
+        # a sample of the keys it just wrote — served from the overlay,
+        # no flush on the critical path
+        front.submit(UpdateBatch(src=us, dst=ud, w=uw, op=op, tenant="fraud",
+                                 latency_class="batch"))
+        probe = rng.integers(0, len(us), 32)
+        rd = front.submit(PointRead(qsrc=us[probe], qdst=ud[probe],
+                                    tenant="fraud",
+                                    latency_class="interactive"))
+        # dashboard traffic rides the same windows against the snapshot
+        front.submit(DegreeRead(verts=rng.integers(0, args.vertices, 64),
+                                tenant="dashboard"))
+        ranks_ticket = front.submit(Analytics(name="pagerank", kw=(
+            ("max_iters", 15), ("tol", 1e-8)), tenant="dashboard",
+            latency_class="batch"))
+        clock.advance(max(args.batch / args.qps, 0.05))
+        front.step()
         if (i + 1) % 5 == 0:
-            contig = float(gtchain_contiguity(service.snapshot.cbl.store))
-            print(f"  batch {i + 1}: epoch={service.epoch} "
-                  f"contiguity={contig:.3f} pending={service.pending_updates} "
-                  f"top={int(jnp.argmax(ranks))}")
+            ins = op > 0
+            n_pend = service.pending_updates
+            print(f"  batch {i + 1}: epoch={service.epoch} pending={n_pend} "
+                  f"fraud read-your-writes hit="
+                  f"{bool(rd.done and rd.value['found'][np.asarray(ins)[probe]].all())}")
+    front.drain(flush=True)
+    wall = time.perf_counter() - t0
 
-    service.flush()
-    st = service.stats
-    eps = args.batch * args.batches / t_updates
-    print(f"processed {args.batches} batches: "
-          f"{eps:,.0f} updates/s, {t_ranks / args.batches * 1e3:.1f} ms/refresh")
-    print(f"maintenance: {st.compacts} compacts, {st.rebuilds} rebuilds, "
-          f"{st.grows} grows; {st.coalesced} coalesced, "
-          f"{st.applied_inserts} inserts / {st.applied_deletes} deletes "
-          f"applied over {st.flushes} flushes")
+    ranks = np.asarray(ranks_ticket.value)
+    rep = front.report()
+    print(f"\nprocessed {rep['completed']} requests in {wall:.2f}s wall "
+          f"({rep['completed'] / wall:,.0f} req/s); "
+          f"final epoch {service.epoch}, top vertex {int(np.argmax(ranks))}")
+    print(json.dumps(rep, indent=1, default=str))
 
 
 if __name__ == "__main__":

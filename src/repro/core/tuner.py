@@ -150,6 +150,91 @@ def choose_plan(cbl, task, probe: Optional[SystemProbe] = None,
     return plan
 
 
+# ---- serving-frontend plan (repro.serve) ----------------------------------
+
+# dispatch-window clamps per latency class (seconds): an interactive read
+# may wait at most ~a few ms for co-batching; batch traffic trades latency
+# for occupancy.  The window chosen inside the clamp targets TARGET_OCCUPANCY
+# of the largest bucket at the observed arrival rate.
+SERVE_WINDOW_CLAMPS = {
+    "interactive": (0.0005, 0.005),
+    "standard": (0.002, 0.025),
+    "batch": (0.010, 0.250),
+}
+SERVE_TARGET_OCCUPANCY = 0.5
+SERVE_MAX_BUCKET_CAP = 4096
+SERVE_MIN_BUCKET = 16
+
+
+def _pow2_at_least(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePlan:
+    """Knobs for the :mod:`repro.serve` frontend, keyed on arrival rate.
+
+    ``bucket_set`` is the closed set of padded batch shapes the frontend may
+    compile (power-of-two ladder — the jit cache is bounded by its length
+    per request kind); ``windows`` maps latency class -> dispatch window
+    seconds; ``flush_pending_max`` is the pending-record count at which the
+    scheduler interleaves a flush ahead of read serving.
+    """
+    bucket_set: tuple
+    windows: dict
+    flush_pending_max: int
+    arrival_lanes_per_s: float
+
+
+def choose_serve_plan(arrival_qps: float, mean_lanes_per_request: float = 8.0,
+                      probe: Optional[SystemProbe] = None,
+                      log_capacity: int = 4096,
+                      high_watermark: float = 0.75) -> ServePlan:
+    """Size the frontend's bucket ladder and dispatch windows from the
+    observed arrival rate (the serving analogue of ``choose_plan``: pick
+    the batching strategy from a measured system statistic, not a constant).
+
+    The largest bucket is sized to hold the lanes arriving inside the batch
+    class's window clamp at ``SERVE_TARGET_OCCUPANCY``; each class's window
+    is then the time to fill that bucket at the arrival rate, clamped to the
+    class's latency budget.  A higher rate therefore grows buckets *and*
+    shrinks windows — both directions keep occupancy near the target
+    without opening new compile-cache entries (the ladder stays a bounded
+    power-of-two set).
+    """
+    lane_rate = max(arrival_qps, 1.0) * max(mean_lanes_per_request, 1.0)
+    batch_hi = SERVE_WINDOW_CLAMPS["batch"][1]
+    # an update mega-batch must clear the log's high-watermark admission
+    # gate even when the log is empty, or apply() would reject it forever —
+    # clamp the ladder below the watermarked capacity (pass the service's
+    # actual high_watermark when it differs from the 0.75 default)
+    limit = max(int(high_watermark * log_capacity), SERVE_MIN_BUCKET)
+    p = _pow2_at_least(limit)
+    hard_cap = min(SERVE_MAX_BUCKET_CAP, p if p == limit else p // 2)
+    max_bucket = _pow2_at_least(
+        int(min(max(lane_rate * batch_hi * SERVE_TARGET_OCCUPANCY,
+                    SERVE_MIN_BUCKET), hard_cap)))
+    min_bucket = max(SERVE_MIN_BUCKET, max_bucket // 16)
+    ladder, b = [], min_bucket
+    while b <= max_bucket:
+        ladder.append(b)
+        b *= 2
+    fill = SERVE_TARGET_OCCUPANCY * max_bucket / lane_rate   # bucket fill time
+    windows = {cls: float(min(max(fill, lo), hi))
+               for cls, (lo, hi) in SERVE_WINDOW_CLAMPS.items()}
+    plan = ServePlan(bucket_set=tuple(ladder), windows=windows,
+                     flush_pending_max=max(64, log_capacity // 2),
+                     arrival_lanes_per_s=lane_rate)
+    logger.info(
+        "choose_serve_plan qps=%.1f lanes/s=%.1f buckets=%s windows=%s "
+        "flush_pending_max=%d", arrival_qps, lane_rate, plan.bucket_set,
+        {k: round(v, 4) for k, v in windows.items()}, plan.flush_pending_max)
+    return plan
+
+
 def choose_engine_impl(cbl, task="scan_all",
                        probe: Optional[SystemProbe] = None,
                        backend: Optional[str] = None) -> str:

@@ -1,0 +1,25 @@
+"""repro.serve — batched multi-tenant request frontend over repro.stream.
+
+The serving analogue of the paper's storage/prefetch co-design: request
+batching hides per-request dispatch latency the way coroutine prefetch
+hides per-block fetch latency, and the read-your-writes overlay hides
+flush latency behind versioned reads.
+
+    from repro.serve import PointRead, ServeFrontend, UpdateBatch
+    front = ServeFrontend(service)                 # a stream.GraphService
+    front.register_tenant("fraud", read_your_writes=True)
+    t = front.submit(PointRead(qsrc=qs, qdst=qd, tenant="fraud",
+                               latency_class="interactive"))
+    front.submit(UpdateBatch(src=us, dst=ud, tenant="fraud"))
+    front.drain()                                  # or step() from a loop
+    t.value["found"], t.value["w"], t.version
+    front.report()                                 # QPS / p50 / p99 / occupancy
+"""
+from repro.core.tuner import ServePlan, choose_serve_plan
+from repro.serve.batcher import (JitShapeStat, KindQueue, MicroBatch,
+                                 bucket_for)
+from repro.serve.overlay import overlay_degrees, overlay_point_reads
+from repro.serve.request import (KINDS, LATENCY_CLASSES, READ_KINDS, Analytics,
+                                 DegreeRead, KHopSample, PointRead, Request,
+                                 Ticket, UpdateBatch)
+from repro.serve.scheduler import (ManualClock, ServeFrontend, TenantConfig)

@@ -1,0 +1,84 @@
+"""Read-your-writes overlay: pending log records atop a pinned snapshot.
+
+LSMGraph's memtable-over-CSR read path, transplanted: a point or degree
+read first resolves against the immutable snapshot, then the coalesced
+pending window of the update log (:class:`repro.stream.log.PendingView`)
+overrides per key — the same last-op-per-key net effect the next flush
+will apply, so an overlay read is bit-identical to flushing first and
+reading the new snapshot:
+
+  * pending **insert** of (s, d)  -> found, with the pending weight
+    (upsert semantics: replaces an existing edge's weight, adds the edge
+    and +1 degree otherwise);
+  * pending **delete** of (s, d)  -> not found, weight 0 (a no-op on the
+    degree when the edge never existed);
+  * delete-then-reinsert sequences already collapsed to their final op by
+    the view's coalescing, so ordering within the pending window cannot
+    leak through.
+
+Split in two stages on purpose: the *base* reads go through the snapshot
+layer (which dispatches CBList vs ShardedCBList), and only the pure
+array combine is jitted here — so sharded services get the overlay for
+free, and the combine's compile cache is keyed on (query bucket, log
+capacity) alone.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.updates import DELETE, INSERT
+from repro.stream import snapshot as snap
+from repro.stream.log import PendingView
+from repro.stream.snapshot import Snapshot
+
+
+@jax.jit
+def _combine_point(base_found: jax.Array, base_w: jax.Array,
+                   pend: PendingView, qsrc: jax.Array, qdst: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    match = ((qsrc[:, None] == pend.src[None, :])
+             & (qdst[:, None] == pend.dst[None, :]) & pend.live[None, :])
+    hit = match.any(axis=1)
+    idx = jnp.argmax(match, axis=1)       # ≤1 live lane per key (coalesced)
+    is_ins = pend.op[idx] == INSERT
+    found = jnp.where(hit, is_ins, base_found)
+    w = jnp.where(hit, jnp.where(is_ins, pend.w[idx], 0.0), base_w)
+    return found, w
+
+
+@jax.jit
+def _combine_degrees(base_deg: jax.Array, pend: PendingView,
+                     pend_exists: jax.Array, verts: jax.Array) -> jax.Array:
+    delta = (jnp.where(pend.live & (pend.op == INSERT) & ~pend_exists, 1, 0)
+             + jnp.where(pend.live & (pend.op == DELETE) & pend_exists, -1, 0))
+    per_vert = jnp.where(verts[:, None] == pend.src[None, :],
+                         delta[None, :], 0).sum(axis=1)
+    return base_deg + per_vert
+
+
+def overlay_point_reads(snapshot: Snapshot, pend: PendingView,
+                        qsrc, qdst) -> Tuple[jax.Array, jax.Array]:
+    """(found, weight) as of snapshot ⊕ pending window."""
+    qsrc = jnp.asarray(qsrc, jnp.int32)
+    qdst = jnp.asarray(qdst, jnp.int32)
+    base_found, base_w = snap.query_edges(snapshot, qsrc, qdst)
+    return _combine_point(base_found, base_w, pend, qsrc, qdst)
+
+
+def overlay_degrees(snapshot: Snapshot, pend: PendingView, verts) -> jax.Array:
+    """Out-degrees as of snapshot ⊕ pending window.
+
+    Each live pending record shifts its source's degree only when it
+    changes topology: an insert of a *new* key (+1), a delete of an
+    *existing* key (−1); weight upserts and deletes of absent keys are
+    degree-neutral — matching what the flush's upsert framing applies.
+    """
+    verts = jnp.asarray(verts, jnp.int32)
+    base = snap.query_degrees(snapshot, verts)
+    # existence of each pending key in the base (sharded-safe dispatch);
+    # dead lanes are don't-cares (masked by pend.live in the combine)
+    pend_exists, _ = snap.query_edges(snapshot, pend.src, pend.dst)
+    return _combine_degrees(base, pend, pend_exists, verts)

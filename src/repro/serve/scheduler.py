@@ -1,0 +1,446 @@
+"""The serving loop: multi-tenant request scheduling over GraphService.
+
+One :class:`ServeFrontend` owns the per-kind micro-batch queues
+(:mod:`repro.serve.batcher`), the read-your-writes overlay routing
+(:mod:`repro.serve.overlay`), and the interleaving of write-side work
+(log admission, flush, maintenance — all inside :meth:`GraphService.flush`)
+with read serving across snapshot versions.  The GastCoCo move — hide the
+latency of one stream inside the batching slack of another — applied to
+serving: flushes run in the dispatch windows reads are already waiting out.
+
+Scheduling is cooperative and host-driven: :meth:`ServeFrontend.step`
+dispatches everything due at ``now`` and returns; callers pump it from
+their event loop (or :meth:`drain` for replay/bench workloads).  The clock
+is injectable so tests and benches replay traffic on a virtual timeline.
+
+Per step, in order:
+
+  1. due **update** micro-batches are admitted into the service log
+     (padded to a bucket, masked — bounded compile cache like every kind);
+  2. a **flush** is interleaved when the pending count crosses
+     ``ServePlan.flush_pending_max`` (publishing a new snapshot epoch;
+     maintenance piggybacks on the flush);
+  3. due **point/degree read** batches dispatch against the current
+     snapshot — tenants opted into read-your-writes route through the
+     pending-log overlay instead of waiting for a flush.  Any overlay
+     dispatch first force-admits updates still waiting in the frontend
+     queue: the overlay covers admitted records, so a write must never be
+     invisible merely because its dispatch window is longer than the
+     read's;
+  4. due **khop / analytics** dispatch; for read-your-writes tenants these
+     admit queued updates and force a flush first (whole-graph reads
+     cannot be overlaid per key, so freshness is bought with an epoch
+     advance).
+
+Every response is stamped with the ``(epoch, watermark)`` version it was
+served at.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.tuner import ServePlan, choose_serve_plan
+from repro.serve import overlay as ov
+from repro.serve.batcher import JitShapeStat, KindQueue, MicroBatch
+from repro.serve.request import Request, Ticket
+from repro.stream import snapshot as snap
+from repro.stream.service import GraphService
+
+
+class ManualClock:
+    """Deterministic virtual clock for tests and trace replay."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = float(t0)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+
+class TenantConfig:
+    def __init__(self, read_your_writes: bool = False):
+        self.read_your_writes = bool(read_your_writes)
+
+
+class _Partial:
+    """Accumulator for a ticket split across micro-batches."""
+
+    __slots__ = ("served", "bufs", "parts")
+
+    def __init__(self):
+        self.served = 0
+        self.bufs: Dict[str, np.ndarray] = {}
+        self.parts: List = []
+
+
+class ServeFrontend:
+    """Batched multi-tenant request frontend over a :class:`GraphService`."""
+
+    def __init__(self, service: GraphService, plan: Optional[ServePlan] = None,
+                 *, fanout: Tuple[int, ...] = (15, 10), clock=None,
+                 freshness_flush: bool = True):
+        self.service = service
+        self.plan = plan or choose_serve_plan(
+            100.0, log_capacity=service._log.capacity,
+            high_watermark=service._high_watermark)
+        self.fanout = tuple(fanout)
+        self.clock = clock if clock is not None else time.monotonic
+        self.freshness_flush = bool(freshness_flush)
+        self.tenants: Dict[str, TenantConfig] = {"default": TenantConfig()}
+        # queue key: (kind, overlay?) — overlay and plain variants compile
+        # the same bucket shapes but run different fused functions
+        self._queues: Dict[Tuple[str, bool], KindQueue] = {}
+        self._partials: Dict[int, _Partial] = {}
+        self.shapes = JitShapeStat()
+        self._lat: Dict[Tuple[str, str], List[float]] = {}
+        self._kind_disp: Dict[str, List[float]] = {}   # occupancies per kind
+        self._tenant_span: Dict[str, List[float]] = {}  # [first_arr, last_done]
+        self._completed = 0
+        self._interleaved_flushes = 0
+        self._version_cache: Optional[Tuple] = None
+
+    # ---- tenancy ----------------------------------------------------------
+
+    def register_tenant(self, name: str,
+                        read_your_writes: bool = False) -> TenantConfig:
+        cfg = TenantConfig(read_your_writes)
+        self.tenants[name] = cfg
+        return cfg
+
+    def _overlay_for(self, req: Request) -> bool:
+        cfg = self.tenants.get(req.tenant)
+        return bool(cfg and cfg.read_your_writes)
+
+    # ---- submission -------------------------------------------------------
+
+    def _queue(self, kind: str, use_overlay: bool) -> KindQueue:
+        key = (kind, use_overlay)
+        if key not in self._queues:
+            self._queues[key] = KindQueue(kind, self.plan.bucket_set,
+                                          self.plan.windows)
+        return self._queues[key]
+
+    def submit(self, req: Request) -> Ticket:
+        if req.tenant not in self.tenants:
+            self.register_tenant(req.tenant)
+        ticket = Ticket(req, t_arrival=float(self.clock()))
+        use_overlay = (req.kind in ("point_read", "degree_read", "khop")
+                       and self._overlay_for(req))
+        self._queue(req.kind, use_overlay).put(ticket)
+        span = self._tenant_span.setdefault(req.tenant,
+                                            [ticket.t_arrival, ticket.t_arrival])
+        span[0] = min(span[0], ticket.t_arrival)
+        return ticket
+
+    # ---- the serving loop -------------------------------------------------
+
+    def step(self, now: Optional[float] = None) -> int:
+        """Dispatch everything due at ``now``; returns completions."""
+        now = float(self.clock()) if now is None else float(now)
+        done0 = self._completed
+
+        # 1. write-side: admit due update batches
+        self._pump((("update", False),), now)
+
+        # 2. interleaved flush under write pressure
+        if self.service.pending_updates >= self.plan.flush_pending_max:
+            self._flush()
+
+        # 3. point/degree serving (overlay variants read the pending log)
+        self._pump((("point_read", False), ("degree_read", False),
+                    ("point_read", True), ("degree_read", True)), now)
+
+        # 4. whole-graph reads (khop + analytics)
+        self._pump((("khop", False), ("khop", True),
+                    ("analytics", False), ("analytics", True)), now)
+        return self._completed - done0
+
+    def drain(self, flush: bool = False) -> int:
+        """Pump steps at each next deadline until every queue is empty.
+
+        Steps at the *earliest* pending deadline each round so recorded
+        latencies keep their deadline order (stepping at the latest would
+        complete an interactive read with a batch-window timestamp).
+        """
+        done0 = self._completed
+        while any(len(q) for q in self._queues.values()):
+            deadlines = [q.next_deadline() for q in self._queues.values()
+                         if len(q)]
+            self.step(max(float(self.clock()), min(deadlines)))
+        if flush:
+            self._flush()
+        return self._completed - done0
+
+    def _pump(self, keys, now: float) -> None:
+        for key in keys:
+            q = self._queues.get(key)
+            while q is not None and q.due(now):
+                self._dispatch(q.take(), overlay=key[1], now=now)
+
+    def _flush(self) -> None:
+        if self.service.pending_updates > 0:
+            self.service.flush()
+            self._interleaved_flushes += 1
+
+    def _admit_queued_updates(self, now: float) -> None:
+        """Force-admit every update still waiting in the frontend queue.
+
+        Read-your-writes covers *admitted* records (the log's pending
+        window), so an overlay read dispatching ahead of a slower update
+        window must not leave that tenant's writes sitting in the queue —
+        admission is pulled forward, the updates' own dispatch windows only
+        bound how long they wait when nobody is reading.
+        """
+        q = self._queues.get(("update", False))
+        while q is not None and len(q):
+            self._dispatch(q.take(), overlay=False, now=now)
+
+    def _version(self) -> Tuple[int, int]:
+        """The current snapshot's concrete (epoch, watermark), cached per
+        snapshot object — dispatch stamps must not pay two blocking
+        device syncs per micro-batch."""
+        snapshot = self.service.snapshot
+        if self._version_cache is None or self._version_cache[0] is not snapshot:
+            self._version_cache = (snapshot, snapshot.version)
+        return self._version_cache[1]
+
+    # ---- dispatch ---------------------------------------------------------
+
+    def _dispatch(self, mb: MicroBatch, overlay: bool, now: float) -> None:
+        if overlay:
+            self._admit_queued_updates(now)    # read-your-writes: the overlay
+                                               # only sees admitted records
+        if mb.kind == "analytics":
+            self._run_analytics(mb, overlay, now)
+            return
+        self.shapes.record(mb.kind, mb.bucket)
+        self._kind_disp.setdefault(mb.kind, []).append(mb.occupancy)
+        if mb.kind == "update":
+            self._run_update(mb, now)
+        elif mb.kind == "point_read":
+            self._run_point(mb, overlay, now)
+        elif mb.kind == "degree_read":
+            self._run_degree(mb, overlay, now)
+        elif mb.kind == "khop":
+            self._run_khop(mb, overlay, now)
+        else:                                          # pragma: no cover
+            raise ValueError(f"unknown request kind {mb.kind!r}")
+
+    def _fuse(self, mb: MicroBatch, field, fill, dtype) -> np.ndarray:
+        out = np.full((mb.bucket,), fill, dtype)
+        for ticket, (off, req_off, width) in zip(mb.tickets, mb.spans):
+            arr = field(ticket.request)
+            if arr is not None:
+                out[off:off + width] = arr[req_off:req_off + width]
+        return out
+
+    def _valid_mask(self, mb: MicroBatch) -> np.ndarray:
+        m = np.zeros((mb.bucket,), bool)
+        m[:mb.lanes] = True
+        return m
+
+    # -- per-kind executors --
+
+    def _run_update(self, mb: MicroBatch, now: float) -> None:
+        src = self._fuse(mb, lambda r: r.src, 0, np.int32)
+        dst = self._fuse(mb, lambda r: r.dst, 0, np.int32)
+        w = self._fuse(mb, lambda r: r.w, 1.0, np.float32)
+        op = self._fuse(mb, lambda r: r.op, 1, np.int32)       # INSERT
+        receipt = self.service.apply(src, dst, w, op,
+                                     valid=self._valid_mask(mb))
+        if not bool(receipt.admitted):
+            # the service's own flush-and-retry is bypassed under
+            # auto_flush=False — the frontend owns flush scheduling, so it
+            # retries once itself rather than completing tickets for writes
+            # that were never admitted
+            self._flush()
+            receipt = self.service.apply(src, dst, w, op,
+                                         valid=self._valid_mask(mb))
+            if not bool(receipt.admitted):
+                raise RuntimeError(
+                    f"update mega-batch of {mb.lanes} lanes rejected by an "
+                    "empty log — bucket ladder exceeds the admission gate "
+                    "(see choose_serve_plan's high_watermark clamp)")
+        version = self._version()
+        for ticket, (off, req_off, width) in zip(mb.tickets, mb.spans):
+            self._offer(ticket, "receipts", receipt, width, now, version)
+
+    def _run_point(self, mb: MicroBatch, overlay: bool, now: float) -> None:
+        qs = self._fuse(mb, lambda r: r.qsrc, 0, np.int32)
+        qd = self._fuse(mb, lambda r: r.qdst, 0, np.int32)
+        snapshot = self.service.snapshot
+        if overlay:
+            found, w = ov.overlay_point_reads(snapshot,
+                                              self.service.pending_view(),
+                                              qs, qd)
+        else:
+            found, w = snap.query_edges(snapshot, qs, qd)
+        found, w = np.asarray(found), np.asarray(w)
+        for ticket, (off, req_off, width) in zip(mb.tickets, mb.spans):
+            self._offer(ticket, ("found", "w"),
+                        (found[off:off + width], w[off:off + width]),
+                        width, now, self._version(), req_off=req_off)
+
+    def _run_degree(self, mb: MicroBatch, overlay: bool, now: float) -> None:
+        verts = self._fuse(mb, lambda r: r.verts, 0, np.int32)
+        snapshot = self.service.snapshot
+        if overlay:
+            deg = ov.overlay_degrees(snapshot, self.service.pending_view(),
+                                     verts)
+        else:
+            deg = snap.query_degrees(snapshot, verts)
+        deg = np.asarray(deg)
+        for ticket, (off, req_off, width) in zip(mb.tickets, mb.spans):
+            self._offer(ticket, ("deg",), (deg[off:off + width],),
+                        width, now, self._version(), req_off=req_off)
+
+    def _run_khop(self, mb: MicroBatch, overlay: bool, now: float) -> None:
+        # read-your-writes for a whole-neighborhood read = flush first: the
+        # per-key overlay cannot patch a sampled subgraph
+        if overlay and self.freshness_flush:
+            self._flush()
+        seeds = self._fuse(mb, lambda r: r.seeds, 0, np.int32)
+        salt = 0
+        for t in mb.tickets:
+            salt = (salt * 1000003 + int(t.request.seed) + t.id) & 0x7FFFFFFF
+        key = jax.random.PRNGKey(salt)
+        snapshot = self.service.snapshot
+        sg = snap.sample_khop(snapshot, seeds, key, self.fanout)
+        sg_np = tuple(np.asarray(x) for x in sg)
+        # per-hop layout: seed lane i owns edge lanes [i*P_h, (i+1)*P_h)
+        # inside hop h's segment, where P_h = prod(fanout[:h+1])
+        hop_off, hop_P = [], []
+        off_acc = 0
+        P = 1
+        for k in self.fanout:
+            P *= k
+            hop_off.append(off_acc)
+            hop_P.append(P)
+            off_acc += mb.bucket * P
+        for ticket, (off, req_off, width) in zip(mb.tickets, mb.spans):
+            idx = np.concatenate([
+                np.arange(ho + off * P, ho + (off + width) * P)
+                for ho, P in zip(hop_off, hop_P)])
+            part = {"src": sg_np[0][idx], "dst": sg_np[1][idx],
+                    "layer": sg_np[2][idx], "valid": sg_np[3][idx],
+                    "seeds": ticket.request.seeds[req_off:req_off + width]}
+            self._offer(ticket, "khop_parts", part, width, now,
+                        self._version())
+
+    def _run_analytics(self, mb: MicroBatch, overlay: bool, now: float
+                       ) -> None:
+        for ticket in mb.tickets:
+            req = ticket.request
+            if self._overlay_for(req) and self.freshness_flush:
+                self._admit_queued_updates(now)
+                self._flush()
+            out = self.service.analytics(req.name, source=req.source,
+                                         **dict(req.kw))
+            ticket.complete(out, now, self._version())
+            self._record_done(ticket, now)
+
+    # ---- completion / reassembly ------------------------------------------
+
+    def _offer(self, ticket: Ticket, fields, values, width: int, now: float,
+               version, req_off: int = 0) -> None:
+        """Credit ``width`` served lanes to ``ticket``; complete when full."""
+        total = ticket.request.size
+        if width == total and ticket.id not in self._partials:
+            value = self._finalize(ticket, fields, values)
+            ticket.complete(value, now, version)
+            self._record_done(ticket, now)
+            return
+        part = self._partials.setdefault(ticket.id, _Partial())
+        if isinstance(fields, tuple):            # array results: fill buffers
+            for name, arr in zip(fields, values):
+                buf = part.bufs.get(name)
+                if buf is None:
+                    buf = part.bufs[name] = np.zeros((total,), arr.dtype)
+                buf[req_off:req_off + width] = arr
+        else:                                    # object results: collect
+            part.parts.append(values)
+        part.served += width
+        if part.served >= total:
+            del self._partials[ticket.id]
+            value = self._finalize(ticket, fields, part)
+            ticket.complete(value, now, version)
+            self._record_done(ticket, now)
+
+    @staticmethod
+    def _receipt_value(receipts) -> dict:
+        """Aggregate the covering mega-batch receipts (attribution is per
+        batch, not per ticket — counts include co-batched requests)."""
+        return {"admitted": all(bool(r.admitted) for r in receipts),
+                "appended": sum(int(r.appended) for r in receipts),
+                "coalesced": sum(int(r.coalesced) for r in receipts)}
+
+    def _finalize(self, ticket: Ticket, fields, payload):
+        kind = ticket.request.kind
+        if isinstance(payload, _Partial):
+            if kind == "update":
+                return self._receipt_value(payload.parts)
+            if kind == "khop":
+                return {k: np.concatenate([p[k] for p in payload.parts])
+                        for k in payload.parts[0]}
+            vals = tuple(payload.bufs[name] for name in fields)
+        else:
+            if kind == "update":
+                return self._receipt_value([payload])
+            if kind == "khop":
+                return payload
+            vals = payload
+        if kind == "point_read":
+            return {"found": vals[0], "w": vals[1]}
+        return {"deg": vals[0]}
+
+    def _record_done(self, ticket: Ticket, now: float) -> None:
+        self._completed += 1
+        req = ticket.request
+        self._lat.setdefault((req.tenant, req.latency_class),
+                             []).append(ticket.latency)
+        span = self._tenant_span.setdefault(req.tenant, [ticket.t_arrival, now])
+        span[1] = max(span[1], now)
+
+    # ---- stats ------------------------------------------------------------
+
+    def report(self) -> dict:
+        """Per-tenant / per-class / per-kind serving statistics."""
+        tenants: Dict[str, dict] = {}
+        for (tenant, cls), lats in sorted(self._lat.items()):
+            t = tenants.setdefault(tenant, {"requests": 0, "by_class": {}})
+            arr = np.asarray(lats)
+            t["requests"] += len(lats)
+            t["by_class"][cls] = {
+                "count": len(lats),
+                "p50_ms": float(np.percentile(arr, 50) * 1e3),
+                "p99_ms": float(np.percentile(arr, 99) * 1e3),
+            }
+        for tenant, t in tenants.items():
+            a0, a1 = self._tenant_span.get(tenant, (0.0, 0.0))
+            t["qps"] = t["requests"] / (a1 - a0) if a1 > a0 else float("inf")
+        kinds = {}
+        shape_rep = self.shapes.report()
+        for kind, occs in sorted(self._kind_disp.items()):
+            kinds[kind] = {
+                "dispatches": len(occs),
+                "mean_occupancy": float(np.mean(occs)),
+                **shape_rep.get(kind, {"jit_cache_size": 0, "buckets": []}),
+            }
+        svc = self.service.stats
+        return {
+            "tenants": tenants,
+            "kinds": kinds,
+            "completed": self._completed,
+            "service": {"epoch": self.service.epoch,
+                        "flushes": svc.flushes,
+                        "interleaved_flushes": self._interleaved_flushes,
+                        "pending_updates": self.service.pending_updates},
+        }

@@ -4,8 +4,8 @@ Update log (admission + coalescing + backpressure), epoch-versioned
 snapshots, maintenance scheduling (compact / rebuild / grow), and
 incremental analytics behind one :class:`GraphService` facade.
 """
-from repro.stream.log import (LogReceipt, UpdateLog, append, drain, log_pending,
-                              make_log)
+from repro.stream.log import (LogReceipt, PendingView, UpdateLog, append,
+                              drain, log_pending, make_log, peek)
 from repro.stream.maintenance import (MaintenanceAction, MaintenancePolicy,
                                       apply_action, chain_overlap_fraction,
                                       decide)

@@ -52,6 +52,22 @@ class LogReceipt(NamedTuple):
     pending: jax.Array    # i32[]   records waiting in the log afterwards
 
 
+class PendingView(NamedTuple):
+    """Non-destructive, cross-batch-coalesced view of the pending records.
+
+    The read-your-writes overlay (:mod:`repro.serve.overlay`) consumes this:
+    ``live`` marks the lanes that carry the *net* op per (src, dst) key —
+    exactly what the next flush will apply — so overlay reads and a
+    flush-then-read oracle see the same final op per key.  Shapes are the
+    log capacity (jit-stable regardless of how many records are pending).
+    """
+    src: jax.Array    # i32[C]
+    dst: jax.Array    # i32[C]
+    w: jax.Array      # f32[C]
+    op: jax.Array     # i32[C]
+    live: jax.Array   # bool[C]  final-op-per-key lanes among pending records
+
+
 def make_log(capacity: int) -> UpdateLog:
     return UpdateLog(
         src=jnp.zeros((capacity,), jnp.int32),
@@ -149,3 +165,24 @@ def drain(log: UpdateLog) -> Tuple[UpdateLog, Tuple[jax.Array, jax.Array,
            jnp.where(live, log.op[pos], NOP),
            live)
     return log._replace(head=log.tail), out
+
+
+@jax.jit
+def peek(log: UpdateLog) -> PendingView:
+    """Read (not pop) every pending record, coalesced across append batches.
+
+    Like :func:`drain` + :func:`_coalesce_mask` but without consuming the
+    log: the returned ``live`` mask keeps only the last op per (src, dst)
+    key among the pending window — the net effect the next flush applies.
+    """
+    C = log.capacity
+    k = jnp.arange(C, dtype=jnp.int32)
+    n = log.tail - log.head
+    pos = (log.head + k) % C
+    valid = k < n
+    src = jnp.where(valid, log.src[pos], 0)
+    dst = jnp.where(valid, log.dst[pos], 0)
+    w = jnp.where(valid, log.w[pos], 0.0)
+    op = jnp.where(valid, log.op[pos], NOP)
+    return PendingView(src=src, dst=dst, w=w, op=op,
+                       live=_coalesce_mask(src, dst, valid))

@@ -53,7 +53,7 @@ from repro.graph import algorithms as _builtin_programs  # noqa: F401 — regist
 from repro.stream import log as ulog
 from repro.stream import maintenance as maint
 from repro.stream import snapshot as snap
-from repro.stream.log import LogReceipt, UpdateLog
+from repro.stream.log import LogReceipt, PendingView, UpdateLog
 from repro.stream.maintenance import MaintenanceAction, MaintenancePolicy
 from repro.stream.snapshot import Snapshot
 
@@ -191,6 +191,16 @@ class GraphService:
         """Admitted records not yet visible to readers (staleness in ops)."""
         return int(ulog.log_pending(self._log))
 
+    def pending_view(self) -> PendingView:
+        """Coalesced, non-destructive view of the pending log records.
+
+        The read-your-writes overlay (:mod:`repro.serve.overlay`) layers
+        this atop the pinned snapshot so opted-in tenants read their own
+        admitted-but-unflushed updates; the view's ``live`` mask carries the
+        same last-op-per-key net effect the next :meth:`flush` will apply.
+        """
+        return ulog.peek(self._log)
+
     def query_edges(self, qsrc, qdst):
         return snap.query_edges(self._snap, jnp.asarray(qsrc, jnp.int32),
                                 jnp.asarray(qdst, jnp.int32))
@@ -204,15 +214,19 @@ class GraphService:
 
     # ---- write path -------------------------------------------------------
 
-    def apply(self, src, dst, w=None, op=None) -> LogReceipt:
+    def apply(self, src, dst, w=None, op=None, valid=None) -> LogReceipt:
         """Admit an update batch into the log (no storage mutation yet).
 
         On watermark rejection the service flushes and retries once (when
         ``auto_flush``); a batch larger than the whole log raises.
+        ``valid`` masks padding lanes so shape-bucketed callers (the serve
+        frontend's micro-batcher) admit padded batches without a recompile
+        per batch size.
         """
         args = (jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32),
                 None if w is None else jnp.asarray(w, jnp.float32),
-                None if op is None else jnp.asarray(op, jnp.int32))
+                None if op is None else jnp.asarray(op, jnp.int32),
+                None if valid is None else jnp.asarray(valid, bool))
         self._log, receipt = ulog.append(self._log, *args,
                                          high_watermark=self._high_watermark)
         if not bool(receipt.admitted):

@@ -33,6 +33,13 @@ class Snapshot(NamedTuple):
     def num_edges(self) -> jax.Array:
         return self.cbl.num_edges
 
+    @property
+    def version(self) -> Tuple[int, int]:
+        """Concrete ``(epoch, watermark)`` pair identifying this view —
+        what the serve scheduler stamps on responses so callers can tell
+        which interleaved flush their read landed on."""
+        return int(self.epoch), int(self.watermark)
+
 
 def snapshot_of(cbl: CBList, epoch: int = 0, watermark: int = 0) -> Snapshot:
     return Snapshot(cbl=cbl, epoch=jnp.asarray(epoch, jnp.int32),

@@ -1,0 +1,382 @@
+"""repro.serve frontend: request IR, shape-bucketed micro-batching,
+read-your-writes overlay, scheduler interleaving (the ISSUE 5 acceptance
+criteria live here and in test_serve_property.py)."""
+import jax.tree_util as jtu
+import numpy as np
+import pytest
+
+from repro.core import DELETE, INSERT, to_coo
+from repro.core.tuner import ServePlan, choose_serve_plan
+from repro.data import rmat_edges, update_stream
+from repro.serve import (Analytics, DegreeRead, KHopSample, ManualClock,
+                         PointRead, ServeFrontend, UpdateBatch, bucket_for)
+from repro.stream import GraphService, MaintenancePolicy, peek
+
+WINDOWS = {"interactive": 0.001, "standard": 0.010, "batch": 0.050}
+
+
+def make_service(nv=200, ne=1500, seed=0, **kw):
+    s, d = rmat_edges(nv, ne, seed=seed)
+    w = (np.random.default_rng(seed).random(len(s)) + 0.1).astype(np.float32)
+    kw.setdefault("log_capacity", 512)
+    return GraphService.from_coo(s, d, w, num_vertices=nv, **kw), (s, d, w)
+
+
+def make_frontend(svc, bucket_set=(16, 64), flush_pending_max=10 ** 6, **kw):
+    plan = ServePlan(bucket_set=tuple(bucket_set), windows=dict(WINDOWS),
+                     flush_pending_max=flush_pending_max,
+                     arrival_lanes_per_s=0.0)
+    clock = ManualClock()
+    return ServeFrontend(svc, plan, clock=clock, **kw), clock
+
+
+# ------------------------------------------------------------- request IR
+
+def test_request_ir_kinds_sizes_and_classes():
+    p = PointRead(qsrc=[1, 2], qdst=[3, 4], tenant="t",
+                  latency_class="interactive")
+    assert p.kind == "point_read" and p.size == 2 and p.tenant == "t"
+    assert DegreeRead(verts=np.arange(5)).size == 5
+    assert KHopSample(seeds=[0, 1, 2]).size == 3
+    assert Analytics(name="pagerank").size == 1
+    u = UpdateBatch(src=[1], dst=[2], op=[DELETE])
+    assert u.kind == "update" and u.size == 1
+    with pytest.raises(ValueError):
+        PointRead(qsrc=[1], qdst=[2], latency_class="warp-speed")
+    with pytest.raises(ValueError):
+        UpdateBatch(src=[1, 2], dst=[3])
+
+
+def test_bucket_for_ladder():
+    assert bucket_for(1, (16, 32, 64)) == 16
+    assert bucket_for(16, (16, 32, 64)) == 16
+    assert bucket_for(17, (16, 32, 64)) == 32
+    assert bucket_for(500, (16, 32, 64)) == 64   # callers split wider
+
+
+def test_choose_serve_plan_rate_keyed():
+    slow = choose_serve_plan(10.0, mean_lanes_per_request=4.0)
+    fast = choose_serve_plan(50_000.0, mean_lanes_per_request=4.0)
+    assert fast.bucket_set[-1] >= slow.bucket_set[-1]
+    assert fast.windows["interactive"] <= slow.windows["interactive"]
+    for plan in (slow, fast):
+        assert all(b == 2 ** int(np.log2(b)) for b in plan.bucket_set)
+        lo_hi = [(0.0005, 0.005), (0.002, 0.025), (0.010, 0.250)]
+        for (lo, hi), cls in zip(lo_hi, ("interactive", "standard", "batch")):
+            assert lo <= plan.windows[cls] <= hi
+    # the ladder respects a small log: no bucket beyond half its capacity
+    tiny = choose_serve_plan(50_000.0, log_capacity=128)
+    assert tiny.bucket_set[-1] <= 64
+
+
+# --------------------------------------------------- pending view (peek)
+
+def test_pending_view_coalesces_without_consuming():
+    svc, _ = make_service()
+    svc.apply([7], [8], [2.0], [INSERT])
+    svc.apply([7], [8], None, [DELETE])          # same key, later append
+    before = svc.pending_updates
+    view = svc.pending_view()
+    live = np.asarray(view.live)
+    assert svc.pending_updates == before         # peek is non-destructive
+    keys = [(int(s), int(d), int(o)) for s, d, o, lv in
+            zip(np.asarray(view.src), np.asarray(view.dst),
+                np.asarray(view.op), live) if lv]
+    assert keys == [(7, 8, DELETE)]              # last op per key survives
+    direct = peek(svc._log)                      # module-level export
+    assert np.array_equal(np.asarray(direct.live), live)
+
+
+# -------------------------------------------------- overlay == flush oracle
+
+def _mixed_ops(svc_edges, nv, rng, n=80):
+    """Upserts of existing edges (weight refresh), new inserts, deletes of
+    existing and absent keys — the full overlay case matrix."""
+    es, ed = svc_edges
+    pick = rng.integers(0, len(es), n // 4)
+    ops = [
+        (es[pick], ed[pick], rng.random(n // 4).astype(np.float32) + 5.0,
+         np.full(n // 4, INSERT, np.int32)),                # weight upsert
+        (rng.integers(0, nv, n // 4).astype(np.int32),
+         rng.integers(0, nv, n // 4).astype(np.int32),
+         rng.random(n // 4).astype(np.float32) + 1.0,
+         np.full(n // 4, INSERT, np.int32)),                # fresh inserts
+        (es[pick], ed[pick], None,
+         np.full(n // 4, DELETE, np.int32)),                # real deletes
+        (rng.integers(0, nv, n // 4).astype(np.int32),
+         rng.integers(0, nv, n // 4).astype(np.int32), None,
+         np.full(n // 4, DELETE, np.int32)),                # absent deletes
+    ]
+    order = rng.permutation(len(ops))
+    return [ops[i] for i in order]
+
+
+def _oracle_pair(nv=150, ne=1200, seed=3, n_shards=1):
+    sa, (s, d, w) = make_service(nv, ne, seed=seed, n_shards=n_shards)
+    sb, _ = make_service(nv, ne, seed=seed, n_shards=n_shards)
+    rng = np.random.default_rng(seed + 1)
+    for us, ud, uw, op in _mixed_ops((np.asarray(s), np.asarray(d)), nv, rng):
+        sa.apply(us, ud, uw, op)
+        sb.apply(us, ud, uw, op)
+    sb.flush()                                   # the oracle path
+    assert sa.pending_updates > 0
+    return sa, sb, (s, d)
+
+
+@pytest.mark.parametrize("n_shards", [1, 2])
+def test_overlay_reads_equal_flush_oracle(n_shards):
+    sa, sb, (s, d) = _oracle_pair(n_shards=n_shards)
+    fa, clock = make_frontend(sa)
+    fb, clock_b = make_frontend(sb)
+    fa.register_tenant("ryw", read_your_writes=True)
+    nv = 150
+    rng = np.random.default_rng(9)
+    qs = np.concatenate([np.asarray(s)[:60], rng.integers(0, nv, 40)]) \
+        .astype(np.int32)
+    qd = np.concatenate([np.asarray(d)[:60], rng.integers(0, nv, 40)]) \
+        .astype(np.int32)
+    ta = fa.submit(PointRead(qsrc=qs, qdst=qd, tenant="ryw"))
+    da = fa.submit(DegreeRead(verts=np.arange(nv), tenant="ryw"))
+    tb = fb.submit(PointRead(qsrc=qs, qdst=qd))
+    db = fb.submit(DegreeRead(verts=np.arange(nv)))
+    clock.advance(1.0), clock_b.advance(1.0)
+    fa.drain(), fb.drain()
+    assert np.array_equal(ta.value["found"], tb.value["found"])
+    assert np.array_equal(ta.value["w"], tb.value["w"]), \
+        "overlay weights must be bit-identical to flush-then-read"
+    assert np.array_equal(da.value["deg"], db.value["deg"])
+    assert sa.pending_updates > 0                # overlay never flushed
+
+
+def test_overlay_is_per_tenant_opt_in():
+    svc, (s, d, w) = make_service()
+    front, clock = make_frontend(svc)
+    front.register_tenant("fraud", read_your_writes=True)
+    front.register_tenant("dash", read_your_writes=False)
+    assert not bool(np.asarray(svc.query_edges([7], [199])[0])[0])
+    front.submit(UpdateBatch(src=[7], dst=[199], tenant="fraud"))
+    t_in = front.submit(PointRead(qsrc=[7], qdst=[199], tenant="fraud"))
+    t_out = front.submit(PointRead(qsrc=[7], qdst=[199], tenant="dash"))
+    clock.advance(1.0)
+    front.drain()
+    assert bool(t_in.value["found"][0]), "opted-in tenant reads its write"
+    assert not bool(t_out.value["found"][0]), "other tenants see the snapshot"
+
+
+def test_ryw_khop_and_analytics_force_flush():
+    svc, _ = make_service()
+    front, clock = make_frontend(svc, fanout=(3, 2))
+    front.register_tenant("ryw", read_your_writes=True)
+    front.submit(UpdateBatch(src=[3], dst=[190], tenant="ryw"))
+    k = front.submit(KHopSample(seeds=[3], tenant="ryw"))
+    clock.advance(1.0)
+    front.drain()
+    assert svc.pending_updates == 0 and svc.epoch >= 1
+    assert k.version[0] == svc.epoch             # served post-flush
+    f, _ = svc.query_edges([3], [190])
+    assert bool(np.asarray(f)[0])
+
+
+# --------------------------------------------------- scheduler + batching
+
+def test_deadline_dispatch_waits_for_window():
+    svc, (s, d, w) = make_service()
+    front, clock = make_frontend(svc)
+    t = front.submit(PointRead(qsrc=s[:4], qdst=d[:4]))   # standard: 10ms
+    front.step(clock.t + 0.005)
+    assert not t.done, "before the window the request must wait for co-batching"
+    front.step(clock.t + 0.011)
+    assert t.done and bool(t.value["found"].all())
+
+
+def test_full_bucket_dispatches_before_deadline():
+    svc, (s, d, w) = make_service()
+    front, clock = make_frontend(svc, bucket_set=(16,))
+    tickets = [front.submit(PointRead(qsrc=s[i:i + 8], qdst=d[i:i + 8]))
+               for i in range(0, 16, 8)]
+    front.step(clock.t)                           # now == arrival, window not up
+    assert all(t.done for t in tickets), "a full largest bucket is due at once"
+
+
+def test_update_order_preserved_across_fused_requests():
+    svc, _ = make_service()
+    front, clock = make_frontend(svc)
+    front.submit(UpdateBatch(src=[11], dst=[190]))
+    front.submit(UpdateBatch(src=[11], dst=[190], op=[DELETE]))
+    clock.advance(1.0)
+    front.drain(flush=True)
+    f, _ = svc.query_edges([11], [190])
+    assert not bool(np.asarray(f)[0]), "later delete must win over earlier insert"
+    front.submit(UpdateBatch(src=[12], dst=[191], op=[DELETE]))
+    front.submit(UpdateBatch(src=[12], dst=[191]))
+    clock.advance(1.0)
+    front.drain(flush=True)
+    f, _ = svc.query_edges([12], [191])
+    assert bool(np.asarray(f)[0]), "later insert must win over earlier delete"
+
+
+def test_ryw_sees_update_still_queued_in_frontend():
+    # the write sits in a *longer* dispatch window than the read: overlay
+    # dispatch must force-admit it rather than serve a stale miss
+    svc, _ = make_service()
+    front, clock = make_frontend(svc)
+    front.register_tenant("ryw", read_your_writes=True)
+    front.submit(UpdateBatch(src=[9], dst=[195], tenant="ryw",
+                             latency_class="batch"))       # 50ms window
+    t = front.submit(PointRead(qsrc=[9], qdst=[195], tenant="ryw",
+                               latency_class="interactive"))  # 1ms window
+    front.step(clock.t + 0.002)       # read due, update window not elapsed
+    assert t.done and bool(t.value["found"][0]), \
+        "read-your-writes must see the tenant's queued (undue) write"
+    assert svc.pending_updates >= 1   # admitted, not flushed
+
+
+def test_split_request_serves_one_snapshot_version():
+    # all parts of a split request must dispatch in the same pump (no flush
+    # between parts) and carry one (epoch, watermark) version
+    svc, (s, d, w) = make_service()
+    front, clock = make_frontend(svc, bucket_set=(16,), flush_pending_max=1)
+    front.submit(UpdateBatch(src=[3], dst=[180]))          # pending write
+    qs = np.concatenate([np.asarray(s)[:40]])
+    qd = np.concatenate([np.asarray(d)[:40]])
+    t = front.submit(PointRead(qsrc=qs, qdst=qd))          # 40 > 16: 3 parts
+    front.step(clock.t)               # full-bucket trigger, same step
+    assert t.done, "split parts must finish in the pump that started them"
+    assert bool(t.value["found"].all())
+    assert t.version == (svc.epoch, int(svc.snapshot.watermark))
+
+
+def test_update_rejection_flushes_and_retries_no_silent_drop():
+    # auto_flush=False bypasses the service's own retry: the frontend must
+    # flush + retry itself, never complete tickets for unadmitted writes
+    svc, _ = make_service(log_capacity=32, high_watermark=0.5,
+                          auto_flush=False)
+    front, clock = make_frontend(svc, bucket_set=(16,))
+    t1 = front.submit(UpdateBatch(src=np.arange(16) % 50,
+                                  dst=100 + np.arange(16)))
+    t2 = front.submit(UpdateBatch(src=np.arange(16) % 50,
+                                  dst=140 + np.arange(16)))
+    clock.advance(1.0)
+    front.drain(flush=True)
+    assert t1.done and t1.value["admitted"]
+    assert t2.done and t2.value["admitted"]
+    f, _ = svc.query_edges(np.tile(np.arange(16) % 50, 2),
+                           np.concatenate([100 + np.arange(16),
+                                           140 + np.arange(16)]))
+    assert bool(np.asarray(f).all()), "no admitted write may be lost"
+
+
+def test_khop_fused_slicing_serves_real_edges():
+    svc, _ = make_service(nv=120, ne=900)
+    front, clock = make_frontend(svc, fanout=(4, 3))
+    t1 = front.submit(KHopSample(seeds=np.arange(5), seed=1))
+    t2 = front.submit(KHopSample(seeds=np.arange(40, 47), seed=2))
+    clock.advance(1.0)
+    front.drain()
+    for t, n_seeds in ((t1, 5), (t2, 7)):
+        sg = t.value
+        assert sg["seeds"].shape == (n_seeds,)
+        assert sg["src"].shape == (n_seeds * (4 + 12),)
+        ok = sg["valid"]
+        assert ok.sum() > 0
+        f, _ = svc.query_edges(sg["src"][ok], sg["dst"][ok])
+        assert bool(np.asarray(f).all()), "sampled edges must exist in snapshot"
+    # hop-0 sources are the request's own seeds, not another tenant's
+    hop0 = (t2.value["layer"] == 0) & t2.value["valid"]
+    assert set(t2.value["src"][hop0]) <= set(range(40, 47))
+
+
+def test_query_degrees_facade_through_frontend():
+    svc, _ = make_service()
+    front, clock = make_frontend(svc)
+    verts = np.array([0, 5, 17, 300, -2], np.int32)
+    t = front.submit(DegreeRead(verts=verts))
+    clock.advance(1.0)
+    front.drain()
+    ref = np.asarray(svc.query_degrees(verts))    # the service facade method
+    assert np.array_equal(t.value["deg"], ref)
+    vd = np.asarray(svc.snapshot.cbl.v_deg)
+    assert t.value["deg"][0] == vd[0] and t.value["deg"][2] == vd[17]
+    assert t.value["deg"][3] == 0 and t.value["deg"][4] == 0
+
+
+# ------------------------------------- snapshot isolation under the frontend
+
+def test_pinned_snapshot_bit_identical_across_scheduler_cycles():
+    nv = 100
+    s, d = rmat_edges(nv, 600, seed=5)
+    svc = GraphService.from_coo(
+        s, d, num_vertices=nv, num_blocks=128, block_width=4,
+        log_capacity=1024,
+        policy=MaintenancePolicy(contiguity_floor=0.99))  # eager maintenance
+    front, clock = make_frontend(svc, flush_pending_max=64)
+    pinned = svc.snapshot
+    leaves0 = [np.array(x) for x in jtu.tree_leaves(pinned.cbl)]
+    coo0 = tuple(np.array(x) for x in to_coo(pinned.cbl, 4096))
+    for us, ud, uw, op in update_stream(nv, (s, d), 96, 8, seed=6):
+        front.submit(UpdateBatch(src=us, dst=ud, w=uw, op=op))
+        front.submit(PointRead(qsrc=us[:8], qdst=ud[:8]))
+        clock.advance(0.1)
+        front.step()
+    front.drain(flush=True)
+    assert svc.epoch >= 2 and svc.stats.grows + svc.stats.compacts \
+        + svc.stats.rebuilds >= 1, "stream must exercise maintenance/grow"
+    leaves1 = [np.array(x) for x in jtu.tree_leaves(pinned.cbl)]
+    assert len(leaves0) == len(leaves1)
+    for a, b in zip(leaves0, leaves1):
+        assert np.array_equal(a, b), "pinned snapshot storage mutated"
+    coo1 = tuple(np.array(x) for x in to_coo(pinned.cbl, 4096))
+    for a, b in zip(coo0, coo1):
+        assert np.array_equal(a, b)
+    assert pinned.version == (0, 0)
+
+
+# ------------------------------------------------- bucketing bound (10k mix)
+
+def test_bucketing_bound_10k_mixed_stream():
+    """A randomized 10k-request stream with mixed kinds/sizes compiles at
+    most len(bucket_set) distinct shapes per request kind."""
+    nv = 256
+    svc, (s, d, w) = make_service(nv=nv, ne=2000, log_capacity=4096)
+    bucket_set = (16, 32, 64)
+    front, clock = make_frontend(svc, bucket_set=bucket_set,
+                                 flush_pending_max=2048, fanout=(3, 2))
+    front.register_tenant("ryw", read_your_writes=True)
+    rng = np.random.default_rng(0)
+    kinds = rng.choice(4, size=10_000, p=[0.42, 0.30, 0.25, 0.03])
+    for burst in range(0, 10_000, 80):
+        for k in kinds[burst:burst + 80]:
+            size = int(rng.integers(1, 97))       # crosses every bucket
+            tenant = "ryw" if rng.random() < 0.3 else "default"
+            cls = ("interactive", "standard", "batch")[int(rng.integers(3))]
+            if k == 0:
+                front.submit(PointRead(
+                    qsrc=rng.integers(0, nv, size), tenant=tenant,
+                    qdst=rng.integers(0, nv, size), latency_class=cls))
+            elif k == 1:
+                front.submit(DegreeRead(verts=rng.integers(0, nv, size),
+                                        tenant=tenant, latency_class=cls))
+            elif k == 2:
+                front.submit(UpdateBatch(
+                    src=rng.integers(0, nv, size), tenant=tenant,
+                    dst=rng.integers(0, nv, size), latency_class=cls,
+                    op=rng.choice([INSERT, DELETE], size)))
+            else:
+                front.submit(KHopSample(seeds=rng.integers(0, nv, size),
+                                        tenant=tenant, latency_class=cls))
+        clock.advance(0.05)
+        front.step()
+    n = front.drain(flush=True)
+    rep = front.report()
+    assert front._completed == 10_000, rep["completed"]
+    for kind in ("point_read", "degree_read", "update", "khop"):
+        cache = rep["kinds"][kind]["jit_cache_size"]
+        assert cache <= len(bucket_set), \
+            f"{kind}: {cache} compiled shapes > {len(bucket_set)} buckets"
+        assert set(rep["kinds"][kind]["buckets"]) <= set(bucket_set)
+    # stats surface is complete: per-tenant QPS + per-class percentiles
+    for tenant in ("ryw", "default"):
+        assert rep["tenants"][tenant]["qps"] > 0
+        for cls_stats in rep["tenants"][tenant]["by_class"].values():
+            assert cls_stats["p99_ms"] >= cls_stats["p50_ms"] >= 0
+    assert rep["service"]["flushes"] > 0, "writes must have interleaved flushes"

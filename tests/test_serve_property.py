@@ -1,0 +1,109 @@
+"""Property sweep for the serve frontend (hypothesis; skipped when the
+dependency is absent — CI installs requirements-dev.txt and runs these).
+
+The two ISSUE 5 acceptance properties:
+
+  * **overlay == flush oracle** — for ANY interleaving of upserts/deletes
+    admitted but not yet flushed, point/degree reads with read-your-writes
+    enabled are bit-identical to flushing first and reading the new
+    snapshot (including on a 2-way sharded service);
+  * **snapshot isolation** — a pinned snapshot's storage is bit-identical
+    after any scheduler-driven update/flush cycle.
+"""
+import jax.tree_util as jtu
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
+
+from repro.core import DELETE, INSERT  # noqa: E402
+from repro.core.tuner import ServePlan  # noqa: E402
+from repro.data import rmat_edges  # noqa: E402
+from repro.serve import (DegreeRead, ManualClock, PointRead, ServeFrontend,  # noqa: E402
+                         UpdateBatch)
+from repro.stream import GraphService  # noqa: E402
+
+NV = 24
+
+
+def batch_strategy():
+    lane = st.tuples(st.integers(0, NV - 1), st.integers(0, NV - 1),
+                     st.floats(0.5, 4.0, width=32),
+                     st.sampled_from([INSERT, DELETE]))
+    return st.lists(lane, min_size=1, max_size=12)
+
+
+def to_arrays(batch):
+    s, d, w, op = zip(*batch)
+    return (np.array(s, np.int32), np.array(d, np.int32),
+            np.array(w, np.float32), np.array(op, np.int32))
+
+
+def build_service(n_shards):
+    s, d = rmat_edges(NV, 100, seed=7)
+    w = (np.random.default_rng(7).random(len(s)) + 0.1).astype(np.float32)
+    return GraphService.from_coo(s, d, w, num_vertices=NV, log_capacity=256,
+                                 n_shards=n_shards)
+
+
+def build_frontend(svc):
+    plan = ServePlan(bucket_set=(16, 32), windows={"interactive": 0.001,
+                                                   "standard": 0.01,
+                                                   "batch": 0.05},
+                     flush_pending_max=10 ** 6, arrival_lanes_per_s=0.0)
+    clock = ManualClock()
+    return ServeFrontend(svc, plan, clock=clock), clock
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(batches=st.lists(batch_strategy(), min_size=1, max_size=4),
+       n_shards=st.sampled_from([1, 2]))
+def test_overlay_reads_equal_flush_oracle(batches, n_shards):
+    sa = build_service(n_shards)
+    sb = build_service(n_shards)
+    for batch in batches:
+        us, ud, uw, op = to_arrays(batch)
+        sa.apply(us, ud, uw, op)
+        sb.apply(us, ud, uw, op)
+    sb.flush()
+    fa, ca = build_frontend(sa)
+    fb, cb = build_frontend(sb)
+    fa.register_tenant("ryw", read_your_writes=True)
+    # every vertex pair is queried: the sweep covers touched + untouched keys
+    qs, qd = np.divmod(np.arange(NV * NV, dtype=np.int32), NV)
+    ta = fa.submit(PointRead(qsrc=qs, qdst=qd, tenant="ryw"))
+    da = fa.submit(DegreeRead(verts=np.arange(NV), tenant="ryw"))
+    tb = fb.submit(PointRead(qsrc=qs, qdst=qd))
+    db = fb.submit(DegreeRead(verts=np.arange(NV)))
+    ca.advance(1.0), cb.advance(1.0)
+    fa.drain(), fb.drain()
+    assert np.array_equal(ta.value["found"], tb.value["found"])
+    assert np.array_equal(ta.value["w"], tb.value["w"])
+    assert np.array_equal(da.value["deg"], db.value["deg"])
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(batches=st.lists(batch_strategy(), min_size=1, max_size=4),
+       flush_every=st.integers(1, 3))
+def test_pinned_snapshot_survives_scheduler_cycles(batches, flush_every):
+    svc = build_service(1)
+    front, clock = build_frontend(svc)
+    pinned = svc.snapshot
+    leaves0 = [np.array(x) for x in jtu.tree_leaves(pinned.cbl)]
+    for i, batch in enumerate(batches):
+        us, ud, uw, op = to_arrays(batch)
+        front.submit(UpdateBatch(src=us, dst=ud, w=uw, op=op))
+        clock.advance(1.0)
+        front.step()
+        if (i + 1) % flush_every == 0:
+            svc.flush()
+    front.drain(flush=True)
+    for a, b in zip(leaves0, [np.array(x) for x in jtu.tree_leaves(pinned.cbl)]):
+        assert np.array_equal(a, b)
+    assert pinned.version == (0, 0)
