@@ -22,80 +22,13 @@ import numpy as np
 
 
 # ---------------------------------------------------------------------------
-# CSR
+# CSR — the library implementation (promoted to repro.core.csr, where it
+# doubles as the sealed cold tier of repro.core.tiered.TieredGraph; the
+# bench imports it so there is one CSR, not a bench-only fork)
 # ---------------------------------------------------------------------------
 
-class CSRGraph(NamedTuple):
-    offsets: jax.Array    # i32[NV+1]
-    indices: jax.Array    # i32[E] sorted within row
-    weights: jax.Array    # f32[E]
-    nv: int               # static (kept out of jitted signatures)
-
-
-def csr_build(src, dst, w, nv) -> CSRGraph:
-    order = jnp.lexsort((dst, src))
-    s, d, ww = src[order], dst[order], w[order]
-    counts = jax.ops.segment_sum(jnp.ones_like(s), s, num_segments=nv)
-    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                               jnp.cumsum(counts).astype(jnp.int32)])
-    return CSRGraph(offsets, d, ww, nv)
-
-
-@functools.partial(jax.jit, static_argnames=("nv",))
-def _csr_query(offsets, indices, weights, qs, qd, *, nv):
-    g = CSRGraph(offsets, indices, weights, nv)
-    return _csr_query_impl(g, qs, qd)
-
-
-def csr_query(g: CSRGraph, qs, qd):
-    return _csr_query(g.offsets, g.indices, g.weights, qs, qd, nv=g.nv)
-
-
-def _csr_query_impl(g: CSRGraph, qs, qd):
-    """Binary search within each row's [offsets[s], offsets[s+1]) range."""
-    lo = g.offsets[qs]
-    hi = g.offsets[qs + 1]
-
-    def bisect(l, h, d):
-        def body(state):
-            lo_, hi_ = state
-            mid = (lo_ + hi_) // 2
-            v = g.indices[jnp.minimum(mid, g.indices.shape[0] - 1)]
-            go_right = v < d
-            return (jnp.where(go_right, mid + 1, lo_),
-                    jnp.where(go_right, hi_, mid))
-        lo_, hi_ = jax.lax.while_loop(lambda s: s[0] < s[1], body, (l, h))
-        found = (lo_ < h) & (g.indices[jnp.minimum(lo_, g.indices.shape[0] - 1)] == d)
-        return found, jnp.where(found, g.weights[jnp.minimum(lo_, g.weights.shape[0] - 1)], 0.0)
-    return jax.vmap(bisect)(lo, hi, qd)
-
-
-@functools.partial(jax.jit, static_argnames=("nv",))
-def _csr_sweep(offsets, indices, weights, x, *, nv):
-    g = CSRGraph(offsets, indices, weights, nv)
-    return _csr_sweep_impl(g, x)
-
-
-def csr_pagerank_sweep(g: CSRGraph, x):
-    return _csr_sweep(g.offsets, g.indices, g.weights, x, nv=g.nv)
-
-
-def _csr_sweep_impl(g: CSRGraph, x):
-    """One push sweep y[dst] += x[src]*w over the contiguous edge array."""
-    row = jnp.searchsorted(g.offsets, jnp.arange(g.indices.shape[0]),
-                           side="right") - 1
-    msg = x[row] * g.weights
-    return jax.ops.segment_sum(msg, g.indices, num_segments=g.nv)
-
-
-def csr_insert_batch(g: CSRGraph, src, dst, w) -> CSRGraph:
-    """Full rebuild (contiguity means O(E) data movement — the paper's point)."""
-    all_src = jnp.concatenate([
-        jnp.searchsorted(g.offsets, jnp.arange(g.indices.shape[0]),
-                         side="right").astype(jnp.int32) - 1, src])
-    all_dst = jnp.concatenate([g.indices, dst])
-    all_w = jnp.concatenate([g.weights, w])
-    return csr_build(all_src, all_dst, all_w, g.nv)
+from repro.core.csr import (CSRGraph, csr_build, csr_insert_batch,  # noqa: F401,E402
+                            csr_pagerank_sweep, csr_query)
 
 
 # ---------------------------------------------------------------------------

@@ -44,13 +44,24 @@ def run():
     al = B.al_build(src, dst, w, nv, len(src) + 1024)
     t_al = time_fn(lambda: B.al_pagerank_sweep(al, x), iters=3)
     emit("analysis/sweep/al", t_al, f"vs_cblist={t_al / t_cb:.2f}x")
+    # tiered: 90% of the edge mass sealed into the CSR run, the active
+    # tail in the delta — the configuration meant to close the csr/cblist
+    # gap this bench first measured
+    from benchmarks.bench_tier import _cold_mask_for_fraction
+    from repro.core.tiered import seal, tier_from_cbl
+    tg = seal(tier_from_cbl(cbl), _cold_mask_for_fraction(nv, src, 0.9))
+    t_tier = time_fn(lambda: process_edge_push(tg, x))
+    emit("analysis/sweep/tiered", t_tier, f"vs_cblist={t_tier / t_cb:.2f}x")
 
     y_cb = process_edge_push(cbl, x)
     y_csr = B.csr_pagerank_sweep(csr, x)
     y_al = B.al_pagerank_sweep(al, x)
+    y_tier = process_edge_push(tg, x)
     np.testing.assert_allclose(np.array(y_cb), np.array(y_csr), atol=1e-3)
     np.testing.assert_allclose(np.array(y_cb), np.array(y_al), atol=1e-3)
-    results.update({"sweep_cblist": t_cb, "sweep_csr": t_csr, "sweep_al": t_al})
+    np.testing.assert_allclose(np.array(y_cb), np.array(y_tier), atol=1e-3)
+    results.update({"sweep_cblist": t_cb, "sweep_csr": t_csr,
+                    "sweep_al": t_al, "sweep_tiered": t_tier})
     return results
 
 

@@ -1,0 +1,93 @@
+"""Tiered storage: sweep/read cost vs sealed fraction (BENCH_tier.json).
+
+The closure experiment for the gap BENCH_analysis.json first measured
+(CSR sweeps ~4x faster than CBList on data that mostly never changes):
+seal a fraction of the edge mass into the immutable CSR run — cold
+vertices chosen low-degree-first, the activity tail a real workload goes
+cold on — and measure one PageRank push sweep and a point-read batch at
+sealed fractions 0 / 0.5 / 0.9 / 1.0, plus the seal/unseal repartition
+cost itself.  Every configuration is checked against the all-delta
+baseline before it is timed: same sweep output, same point-read results.
+"""
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import build_cbl, dataset, emit, time_fn
+from repro.core import process_edge_push, read_edges
+from repro.core.tiered import seal, tier_from_cbl, unseal
+
+FRACTIONS = (0.0, 0.5, 0.9, 1.0)
+
+
+def _cold_mask_for_fraction(nv, src, frac):
+    """Seal the low-degree tail first until ``frac`` of the edges are cold
+    (the blocks-per-edge greedy: a degree-1 vertex frees a whole delta
+    block per edge sealed, a hub frees one per block_width edges)."""
+    deg = np.bincount(np.asarray(src), minlength=nv)
+    order = np.argsort(deg, kind="stable")          # low degree first
+    cum = np.cumsum(deg[order])
+    take = int(np.searchsorted(cum, frac * len(src), side="left")) + 1
+    mask = np.zeros(nv, bool)
+    mask[order[:take]] = True
+    return jnp.asarray(mask)
+
+
+def run():
+    nv, src, dst, w = dataset("rmat_small")
+    cbl = build_cbl(nv, src, dst, w)
+    x = jnp.asarray(np.random.default_rng(0).random(nv).astype(np.float32))
+    rng = np.random.default_rng(1)
+    miss = rng.integers(0, nv, 2048).astype(np.int32)
+    qs = jnp.concatenate([src[:2048], jnp.asarray(miss)])
+    qd = jnp.concatenate([dst[:2048], jnp.asarray(rng.integers(
+        0, nv, 2048).astype(np.int32))])
+
+    y_ref = process_edge_push(cbl, x)
+    f_ref, w_ref = read_edges(cbl, qs, qd)
+    t_delta = time_fn(lambda: process_edge_push(cbl, x))
+    emit("tier/sweep/all_delta", t_delta)
+    t_read_delta = time_fn(lambda: read_edges(cbl, qs, qd))
+    emit("tier/read/all_delta", t_read_delta)
+
+    results = {"sweep_all_delta": t_delta, "read_all_delta": t_read_delta}
+    tg0 = tier_from_cbl(cbl)
+    for frac in FRACTIONS:
+        tg = (seal(tg0, _cold_mask_for_fraction(nv, src, frac))
+              if frac > 0 else tg0)
+        real_frac = float(tg.sealed_fraction)
+        y = process_edge_push(tg, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=1e-3)
+        f, ww = read_edges(tg, qs, qd)
+        assert np.array_equal(np.asarray(f), np.asarray(f_ref))
+        np.testing.assert_allclose(np.asarray(ww), np.asarray(w_ref),
+                                   atol=1e-5)
+        t_sweep = time_fn(lambda: process_edge_push(tg, x))
+        t_read = time_fn(lambda: read_edges(tg, qs, qd))
+        emit(f"tier/sweep/sealed_{frac}", t_sweep,
+             f"edge_frac={real_frac:.2f} vs_delta={t_delta / t_sweep:.2f}x")
+        emit(f"tier/read/sealed_{frac}", t_read,
+             f"vs_delta={t_read_delta / t_read:.2f}x")
+        results[f"sweep_sealed_{frac}"] = t_sweep
+        results[f"read_sealed_{frac}"] = t_read
+        results[f"edge_fraction_{frac}"] = real_frac
+        if frac == 0.9:
+            results["sweep_speedup_at_0.9"] = t_delta / t_sweep
+            results["read_speedup_at_0.9"] = t_read_delta / t_read
+
+    # repartition cost: the price of moving the 0.9 cold mass in (and half
+    # of it back out) — host-orchestrated, so this is end-to-end wall time
+    mask = _cold_mask_for_fraction(nv, src, 0.9)
+    t_seal = time_fn(lambda: seal(tg0, mask), iters=3, warmup=1)
+    emit("tier/seal_0.9", t_seal)
+    sealed_tg = seal(tg0, mask)
+    half = jnp.asarray(np.arange(nv) % 2 == 0) & mask
+    t_unseal = time_fn(lambda: unseal(sealed_tg, half), iters=3, warmup=1)
+    emit("tier/unseal_half", t_unseal)
+    results.update({"seal_0.9": t_seal, "unseal_half": t_unseal})
+    return results
+
+
+if __name__ == "__main__":
+    run()

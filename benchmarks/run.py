@@ -8,6 +8,7 @@ REPRO_BENCH_SCALE (default 1.0; CI uses 0.25).
   Fig 10 -> bench_query      Fig 11 -> bench_analysis
   Fig 12 -> bench_update     Fig 13 -> bench_batchsize
   Fig 14 / Table 3 -> bench_interleave
+  tiered storage (repro.core.tiered) -> bench_tier
   serving layer (repro.stream) -> bench_stream
   graph sharding (repro.distributed.graph) -> bench_shard
   vertex-program runtime (repro.core.program) -> bench_program
@@ -34,12 +35,13 @@ def _dump(short: str, rows, summary) -> None:
 def main() -> None:
     from benchmarks import (bench_analysis, bench_batchsize, bench_interleave,
                             bench_program, bench_query, bench_serve,
-                            bench_shard, bench_stream, bench_update, common)
+                            bench_shard, bench_stream, bench_tier,
+                            bench_update, common)
     print("name,us_per_call,derived")
     ok = True
     for mod in (bench_query, bench_analysis, bench_update, bench_batchsize,
-                bench_interleave, bench_stream, bench_shard, bench_program,
-                bench_serve):
+                bench_interleave, bench_tier, bench_stream, bench_shard,
+                bench_program, bench_serve):
         short = mod.__name__.split(".")[-1].removeprefix("bench_")
         start = len(common.ROWS)
         try:

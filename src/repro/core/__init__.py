@@ -22,3 +22,10 @@ from repro.core.traversal import (Partition, PlacementPlan, gtchain_partition,
                                   read_vertex)
 from repro.core.tuner import (ExecPlan, SystemProbe, choose_engine_impl,
                               choose_plan)
+from repro.core.csr import (CSRGraph, csr_build, csr_build_counted,
+                            csr_degrees, csr_empty, csr_in_degrees,
+                            csr_pagerank_sweep, csr_pull, csr_push,
+                            csr_push_feat, csr_query, csr_sample_neighbors,
+                            csr_to_coo)
+from repro.core.tiered import (TieredGraph, cold_mask, seal, tier_from_cbl,
+                               tiered_grow, unseal)

@@ -145,13 +145,32 @@ def build_from_coo(src: jax.Array, dst: jax.Array, w: Optional[jax.Array],
                   n_vertices=jnp.asarray(num_vertices, jnp.int32))
 
 
-def to_coo(cbl: CBList, max_edges: int):
+def to_coo(cbl: CBList, max_edges: Optional[int] = None):
     """Extract live edges as padded COO (src, dst, w, valid) — GTChain order.
 
     ``max_edges`` is a static capacity; entries past the live count have
-    valid=False and src=dst=0.
+    valid=False and src=dst=0.  Defaults to the exact live lane count, so
+    the extraction is loss-free by construction — the seal/rebuild paths
+    depend on that.  When a smaller ``max_edges`` is given and the live
+    count exceeds it, this raises instead of silently truncating (the
+    historical failure mode); inside a trace, where the live count is
+    abstract, the check is skipped and the caller owns the capacity.
     """
     st = cbl.store
+    live_edges = None
+    try:
+        live_edges = int(jnp.where(st.owner != NULL, st.count, 0).sum())
+    except jax.errors.ConcretizationTypeError:
+        pass                                   # traced: capacity is static-only
+    if max_edges is None:
+        if live_edges is None:
+            raise ValueError("to_coo: max_edges is required inside jit "
+                             "(the live count is not concrete)")
+        max_edges = live_edges
+    elif live_edges is not None and live_edges > max_edges:
+        raise ValueError(
+            f"to_coo: {live_edges} live edges exceed max_edges={max_edges}; "
+            f"extraction would silently drop {live_edges - max_edges} edges")
     gt = bs.gtchain_order(st)
     keys = st.keys[gt]                        # [NB, B] in GTChain order
     vals = st.vals[gt]
@@ -168,12 +187,15 @@ def to_coo(cbl: CBList, max_edges: int):
             flat_valid[perm])
 
 
-def rebuild(cbl: CBList, max_edges: int, num_blocks: Optional[int] = None,
+def rebuild(cbl: CBList, max_edges: Optional[int] = None,
+            num_blocks: Optional[int] = None,
             block_width: Optional[int] = None) -> CBList:
     """Full defragmenting rebuild (the maintenance analogue of B+ rebalancing).
 
     Extracts live edges and bulk-loads them again: restores range-disjoint
-    sorted chains and GTChain physical contiguity.
+    sorted chains and GTChain physical contiguity.  ``max_edges`` defaults
+    to the exact live count (loss-free); passing a smaller value raises in
+    :func:`to_coo` rather than dropping edges.
     """
     s, d, w, valid = to_coo(cbl, max_edges)
     nb = num_blocks or cbl.store.num_blocks

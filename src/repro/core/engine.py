@@ -143,6 +143,10 @@ def process_edge_push(cbl, x: jax.Array,
     this same sweep per shard under shard_map and combines across the cut.
     """
     if not isinstance(cbl, CBList):
+        from repro.core.tiered import TieredGraph, tiered_process_edge_push
+        if isinstance(cbl, TieredGraph):
+            return tiered_process_edge_push(cbl, x, active, dense_f=dense_f,
+                                            combine=combine, impl=impl)
         from repro.distributed.graph import sharded_process_edge_push
         return sharded_process_edge_push(cbl, x, active, dense_f=dense_f,
                                          combine=combine, impl=impl)
@@ -187,6 +191,11 @@ def process_edge_pull(cbl, x: jax.Array,
     a ShardedCBList (per-shard sweep + cross-cut combine).
     """
     if not isinstance(cbl, CBList):
+        from repro.core.tiered import TieredGraph, tiered_process_edge_pull
+        if isinstance(cbl, TieredGraph):
+            return tiered_process_edge_pull(cbl, x, active_dst,
+                                            dense_f=dense_f, combine=combine,
+                                            impl=impl)
         from repro.distributed.graph import sharded_process_edge_pull
         return sharded_process_edge_pull(cbl, x, active_dst, dense_f=dense_f,
                                          combine=combine, impl=impl)
@@ -231,6 +240,11 @@ def process_edge_push_feat(cbl, x: jax.Array,
     the GTChain ``segment_matmul`` kernel.  Accepts CBList or ShardedCBList.
     """
     if not isinstance(cbl, CBList):
+        from repro.core.tiered import (TieredGraph,
+                                       tiered_process_edge_push_feat)
+        if isinstance(cbl, TieredGraph):
+            return tiered_process_edge_push_feat(cbl, x, active,
+                                                 weighted=weighted, impl=impl)
         from repro.distributed.graph import sharded_process_edge_push_feat
         return sharded_process_edge_push_feat(cbl, x, active,
                                               weighted=weighted, impl=impl)
@@ -262,6 +276,9 @@ def out_degrees(cbl: CBList) -> jax.Array:
 
 def in_degrees(cbl) -> jax.Array:
     if not isinstance(cbl, CBList):
+        from repro.core.tiered import TieredGraph, tiered_in_degrees
+        if isinstance(cbl, TieredGraph):
+            return tiered_in_degrees(cbl)
         from repro.distributed.graph import sharded_in_degrees
         return sharded_in_degrees(cbl)
     st = cbl.store

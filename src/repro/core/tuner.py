@@ -67,6 +67,8 @@ class ExecPlan:
     n_shards: int = 1        # graph shards the sweep spans
     cut_fraction: float = 0.0  # fraction of edges crossing the shard cut
     contiguity: float = 1.0  # the P_h statistic the decision used
+    run_impl: str = "xla"    # tiered: impl for the sealed-CSR tier sweep
+    sealed_fraction: float = 0.0  # tiered: share of edges in the sealed tier
 
 
 def choose_lookahead(probe: SystemProbe, block_bytes: int) -> int:
@@ -96,6 +98,19 @@ def choose_plan(cbl, task, probe: Optional[SystemProbe] = None,
     probe = probe or SystemProbe()
     if on_tpu is None:
         on_tpu = jax.default_backend() == "tpu"
+    from repro.core.tiered import TieredGraph
+    if isinstance(cbl, TieredGraph):
+        # per-tier impl choice: the delta keeps the full hybrid decision
+        # (its plan), the sealed run is a flat contiguous segment reduction
+        # whose only knob is whether its lane extent amortizes the Pallas
+        # stream setup.  The sealed fraction is reported so bench output can
+        # correlate plan choices with tier occupancy.
+        plan = choose_plan(cbl.delta, task, probe, on_tpu=on_tpu)
+        run_impl = ("pallas" if on_tpu and task == "scan_all"
+                    and cbl.run_capacity >= MIN_PALLAS_LANES else "xla")
+        return dataclasses.replace(
+            plan, run_impl=run_impl,
+            sealed_fraction=float(cbl.sealed_fraction))
     if isinstance(cbl, CBList):
         n_shards = 1
         cut = 0.0

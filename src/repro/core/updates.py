@@ -97,6 +97,9 @@ def read_edges(cbl, qsrc: jax.Array, qdst: jax.Array
     find an edge) — like every update entry point in this module.
     """
     if not isinstance(cbl, CBList):
+        from repro.core.tiered import TieredGraph, tiered_read_edges
+        if isinstance(cbl, TieredGraph):
+            return tiered_read_edges(cbl, qsrc, qdst)
         from repro.distributed.graph import sharded_read_edges
         return sharded_read_edges(cbl, qsrc, qdst)
     return _read_edges(cbl, qsrc, qdst)
@@ -262,6 +265,9 @@ def batch_update_stats(cbl, src: jax.Array, dst: jax.Array,
     A ShardedCBList routes each record to its source's owning shard.
     """
     if not isinstance(cbl, CBList):
+        from repro.core.tiered import TieredGraph, tiered_batch_update_stats
+        if isinstance(cbl, TieredGraph):
+            return tiered_batch_update_stats(cbl, src, dst, w, op)
         from repro.distributed.graph import sharded_batch_update_stats
         return sharded_batch_update_stats(cbl, src, dst, w, op)
     return _batch_update_stats(cbl, src, dst, w, op)
@@ -310,6 +316,9 @@ def upsert_edges(cbl, src, dst, w=None,
                  valid: Optional[jax.Array] = None):
     """Insert-or-replace: deletes any existing (src, dst) first."""
     if not isinstance(cbl, CBList):
+        from repro.core.tiered import TieredGraph, tiered_upsert_edges
+        if isinstance(cbl, TieredGraph):
+            return tiered_upsert_edges(cbl, src, dst, w, valid)
         from repro.distributed.graph import sharded_upsert_edges
         return sharded_upsert_edges(cbl, src, dst, w, valid)
     return _upsert_edges(cbl, src, dst, w, valid)
@@ -335,6 +344,9 @@ def delete_vertices(cbl, vids: jax.Array):
     runs on every shard (any shard may hold edges *into* a deleted vertex).
     """
     if not isinstance(cbl, CBList):
+        from repro.core.tiered import TieredGraph, tiered_delete_vertices
+        if isinstance(cbl, TieredGraph):
+            return tiered_delete_vertices(cbl, vids)
         from repro.distributed.graph import sharded_delete_vertices
         return sharded_delete_vertices(cbl, vids)
     return _delete_vertices(cbl, vids)
@@ -379,6 +391,9 @@ def _delete_vertices(cbl: CBList, vids: jax.Array) -> CBList:
 def add_vertices(cbl, k: int | jax.Array):
     """UpdateVertex(add): append-only (aligned to max logical id, paper §5.1)."""
     if not isinstance(cbl, CBList):
+        from repro.core.tiered import TieredGraph, tiered_add_vertices
+        if isinstance(cbl, TieredGraph):
+            return tiered_add_vertices(cbl, k)
         from repro.distributed.graph import sharded_add_vertices
         return sharded_add_vertices(cbl, k)
     return cbl._replace(n_vertices=cbl.n_vertices + jnp.asarray(k, jnp.int32))

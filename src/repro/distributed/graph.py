@@ -334,6 +334,42 @@ def _sharded_sweep(scbl: ShardedCBList, x: jax.Array, active, sweep: Callable,
     return f(scbl.shards, x, active)
 
 
+def sharded_runs_sweep(runs, mesh, x: jax.Array, active, sweep: Callable,
+                       combine: str):
+    """Run a CSR sweep per shard-local sealed run and combine across the cut.
+
+    The sealed tier of a sharded :class:`~repro.core.tiered.TieredGraph`
+    keeps each shard's run shard-local (it holds exactly the sealed vertices
+    that shard owns), so the run tier rides the same 1-D mesh, the same
+    shard_map dispatch, and the same cross-cut collective as the delta.
+    ``runs`` is a :class:`~repro.core.csr.CSRGraph` whose leaves carry a
+    leading ``[S]`` stack axis.
+    """
+    axis_size = mesh.shape["shard"]
+    sr = SEMIRINGS[combine]
+
+    def _local_combine(part):
+        local = sr.lane_reduce(part, axis=0)
+        return _cross_shard_combine(local, combine, axis_size, local.shape[0])
+
+    if active is None:
+        def body(runs_local, xx):
+            return _local_combine(
+                jax.vmap(lambda g: sweep(g, xx, None))(runs_local))
+
+        f = compat.shard_map(body, mesh=mesh, in_specs=(P("shard"), P()),
+                             out_specs=P(), check_rep=False)
+        return f(runs, x)
+
+    def body(runs_local, xx, act):
+        return _local_combine(
+            jax.vmap(lambda g: sweep(g, xx, act))(runs_local))
+
+    f = compat.shard_map(body, mesh=mesh, in_specs=(P("shard"), P(), P()),
+                         out_specs=P(), check_rep=False)
+    return f(runs, x, active)
+
+
 @functools.partial(jax.jit, static_argnames=("dense_f", "combine", "impl"))
 def sharded_process_edge_push(scbl: ShardedCBList, x: jax.Array,
                               active: Optional[jax.Array] = None,

@@ -71,6 +71,9 @@ def _sample_neighbors(cbl: CBList, verts: jax.Array, key: jax.Array,
 def _sample_neighbors_any(cbl, verts, key, k):
     """Dispatch the per-hop draw: shard-routed on a ShardedCBList."""
     if not isinstance(cbl, CBList):
+        from repro.core.tiered import TieredGraph, tiered_sample_neighbors
+        if isinstance(cbl, TieredGraph):
+            return tiered_sample_neighbors(cbl, verts, key, k)
         from repro.distributed.graph import sharded_sample_neighbors
         return sharded_sample_neighbors(cbl, verts, key, k)
     return _sample_neighbors(cbl, verts, key, k)

@@ -17,10 +17,13 @@ reading the new snapshot:
     leak through.
 
 Split in two stages on purpose: the *base* reads go through the snapshot
-layer (which dispatches CBList vs ShardedCBList), and only the pure
-array combine is jitted here — so sharded services get the overlay for
-free, and the combine's compile cache is keyed on (query bucket, log
-capacity) alone.
+layer (which dispatches CBList / ShardedCBList / TieredGraph), and only
+the pure array combine is jitted here — so sharded *and tiered* services
+get the overlay for free, and the combine's compile cache is keyed on
+(query bucket, log capacity) alone.  With tiered storage the symmetry is
+literal: the pending window overlays the delta exactly as the delta
+overlays the sealed CSR run — three LSM levels, one merge discipline
+(newest writer wins per key).
 """
 from __future__ import annotations
 

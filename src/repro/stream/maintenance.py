@@ -19,9 +19,16 @@ three measurable ways; each statistic has a dedicated repair action:
 
 The decision runs host-side between jitted steps (it reads concrete
 statistics, like :func:`repro.core.tuner.choose_plan`); the actions are
-pure CBList -> CBList transforms.  Priority: grow > rebuild > compact —
-capacity loss is correctness-adjacent (dropped edges), fragmentation is
-merely performance.
+pure CBList -> CBList transforms.  Priority: grow > seal > rebuild >
+compact — capacity loss is correctness-adjacent (dropped edges),
+fragmentation is merely performance.
+
+Tiered storage (:class:`~repro.core.tiered.TieredGraph`) adds the
+``"seal"`` action: vertices with no writes for ``seal_after_epochs`` write
+generations move out of the delta into the immutable CSR run (the LSM
+compaction this module was named after).  Sealing shrinks the delta, so it
+outranks the delta-local repairs — a rebuild of chains about to leave the
+delta would be wasted work.
 """
 from __future__ import annotations
 
@@ -46,10 +53,15 @@ class MaintenancePolicy:
     grow_factor: int = 2              # capacity doubling per grow
     max_edges_hint: Optional[int] = None  # rebuild extraction bound
                                           # (default: num_blocks * block_width)
+    seal_after_epochs: Optional[int] = None  # tiered: vertices unwritten for
+                                             # this many write generations
+                                             # are cold (None = never seal)
+    seal_min_fraction: float = 0.05   # don't repartition for fewer cold
+                                      # vertices than this fraction of live
 
 
 class MaintenanceAction(NamedTuple):
-    kind: str                 # "none" | "compact" | "rebuild" | "grow"
+    kind: str         # "none" | "compact" | "rebuild" | "grow" | "seal"
     reason: str               # human-readable trigger description
     num_blocks: int = 0       # grow target (0 = unchanged)
     vertex_capacity: int = 0  # grow target (0 = unchanged)
@@ -96,6 +108,9 @@ def decide(cbl, pending_inserts: int = 0,
     because shard shapes stay uniform.
     """
     if not isinstance(cbl, CBList):
+        from repro.core.tiered import TieredGraph
+        if isinstance(cbl, TieredGraph):
+            return _decide_tiered(cbl, pending_inserts, policy, headroom_only)
         return _decide_sharded(cbl, pending_inserts, policy, headroom_only)
     return _decide_from_stats(
         nb=cbl.store.num_blocks, free=int(bs.free_blocks_left(cbl.store)),
@@ -136,7 +151,34 @@ def _decide_from_stats(*, nb: int, free: int, n_live: int, nv_cap: int,
     return MaintenanceAction(kind="none", reason="all statistics in band")
 
 
-_ACTION_PRIORITY = {"grow": 3, "rebuild": 2, "compact": 1, "none": 0}
+_ACTION_PRIORITY = {"grow": 4, "seal": 3, "rebuild": 2, "compact": 1,
+                    "none": 0}
+
+
+def _decide_tiered(tg, pending_inserts: int, policy: MaintenancePolicy,
+                   headroom_only: bool = False) -> MaintenanceAction:
+    """Tiered decision: the delta's own statistics rule, then sealing.
+
+    Grow always wins (capacity loss trumps layout), and the proactive
+    pre-flush call (``headroom_only``) never seals — a repartition right
+    before a write batch would likely unseal straight back.  Otherwise a
+    large-enough cold set outranks delta-local rebuild/compact.
+    """
+    base = decide(tg.delta, pending_inserts, policy, headroom_only)
+    if headroom_only or base.kind == "grow" \
+            or policy.seal_after_epochs is None:
+        return base
+    from repro.core.tiered import cold_mask
+    cold = np.asarray(cold_mask(tg, policy.seal_after_epochs))
+    n_cold = int(cold.sum())
+    n_live = max(int(tg.n_vertices), 1)
+    if n_cold and n_cold >= policy.seal_min_fraction * n_live \
+            and _ACTION_PRIORITY[base.kind] < _ACTION_PRIORITY["seal"]:
+        return MaintenanceAction(
+            kind="seal",
+            reason=f"{n_cold}/{n_live} vertices unwritten for "
+                   f">={policy.seal_after_epochs} epochs")
+    return base
 
 
 @jax.jit
@@ -196,6 +238,9 @@ def apply_action(cbl, action: MaintenanceAction,
     if action.kind == "none":
         return cbl
     if not isinstance(cbl, CBList):
+        from repro.core.tiered import TieredGraph
+        if isinstance(cbl, TieredGraph):
+            return _apply_tiered(cbl, action, policy)
         from repro.distributed.graph import (compact_sharded, grow_sharded,
                                              rebuild_sharded)
         if action.kind == "compact":
@@ -219,3 +264,20 @@ def apply_action(cbl, action: MaintenanceAction,
         return grow(cbl, num_blocks=action.num_blocks or None,
                     vertex_capacity=action.vertex_capacity or None)
     raise ValueError(f"unknown maintenance action {action.kind!r}")
+
+
+def _apply_tiered(tg, action: MaintenanceAction, policy: MaintenancePolicy):
+    """Tiered actions: seal repartitions the tiers, grow must extend the
+    tier bookkeeping alongside the delta, rebuild/compact stay delta-local
+    (the sealed run is already sorted and contiguous by construction)."""
+    import dataclasses as _dc
+
+    from repro.core.tiered import cold_mask, seal, tiered_grow
+    if action.kind == "seal":
+        if policy.seal_after_epochs is None:
+            raise ValueError("seal action without policy.seal_after_epochs")
+        return seal(tg, cold_mask(tg, policy.seal_after_epochs))
+    if action.kind == "grow":
+        return tiered_grow(tg, num_blocks=action.num_blocks or None,
+                           vertex_capacity=action.vertex_capacity or None)
+    return _dc.replace(tg, delta=apply_action(tg.delta, action, policy))

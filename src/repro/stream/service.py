@@ -61,9 +61,11 @@ MAX_GROW_RETRIES = 6
 
 
 def _num_blocks(cbl) -> int:
-    """Block capacity (per shard when sharded — the grow target unit).
+    """Delta block capacity (per shard when sharded — the grow target unit).
     The update/read entry points themselves dispatch on the storage type
-    (CBList vs ShardedCBList) inside repro.core.updates."""
+    (CBList / ShardedCBList / TieredGraph) inside repro.core.updates; a
+    TieredGraph reports its delta's capacity (grow only ever targets the
+    mutable tier)."""
     return cbl.store.num_blocks if isinstance(cbl, CBList) else cbl.num_blocks
 
 
@@ -115,6 +117,8 @@ class ServiceStats:
     grows: int = 0
     compacts: int = 0
     rebuilds: int = 0
+    seals: int = 0                # cold-vertex seal repartitions (tiered)
+    unseals: int = 0              # vertices written back into the delta
 
 
 class GraphService:
@@ -130,21 +134,37 @@ class GraphService:
                  policy: MaintenancePolicy = MaintenancePolicy(),
                  probe: Optional[SystemProbe] = None,
                  auto_flush: bool = True,
-                 n_shards: int = 1, mesh=None):
+                 n_shards: int = 1, mesh=None,
+                 seal_after_epochs: Optional[int] = None):
         """``n_shards > 1`` splits storage into GTChain-balanced shards on a
         device mesh (:func:`repro.distributed.graph.shard_cbl`): flushes
         route updates to owning shards, maintenance runs per shard, and
         analytics sweeps run under shard_map.  An already-sharded
-        ``ShardedCBList`` is also accepted directly."""
+        ``ShardedCBList`` is also accepted directly.
+
+        ``seal_after_epochs=K`` turns on tiered storage: the CBList (or
+        shard stack) becomes the hot delta of a
+        :class:`~repro.core.tiered.TieredGraph`, and maintenance seals
+        vertices unwritten for K flushes into the immutable CSR run —
+        sweeps and point reads then pay CSR prices for the cold bulk.  A
+        write touching a sealed vertex unseals it transparently."""
+        from repro.core.tiered import TieredGraph
         if isinstance(cbl, CBList):
             if n_shards > 1:
                 from repro.distributed.graph import shard_cbl
                 cbl, _ = shard_cbl(cbl, n_shards, mesh=mesh)
-        elif n_shards > 1 and cbl.n_shards != n_shards:
+        elif not isinstance(cbl, TieredGraph) \
+                and n_shards > 1 and cbl.n_shards != n_shards:
             raise ValueError(
                 f"GraphService(n_shards={n_shards}) got storage already "
                 f"sharded {cbl.n_shards} ways — pass n_shards=1 to keep it, "
                 "or reshard explicitly (unshard + shard_cbl) first")
+        if seal_after_epochs is not None:
+            from repro.core.tiered import tier_from_cbl
+            if not isinstance(cbl, TieredGraph):
+                cbl = tier_from_cbl(cbl)
+            policy = dataclasses.replace(policy,
+                                         seal_after_epochs=seal_after_epochs)
         self._snap = snap.snapshot_of(cbl)
         self._log: UpdateLog = ulog.make_log(log_capacity)
         self._high_watermark = float(high_watermark)
@@ -289,6 +309,10 @@ class GraphService:
         op2 = jnp.concatenate([jnp.where(keep, DELETE, NOP),
                                jnp.where(keep & (op == INSERT), INSERT, NOP)])
 
+        from repro.core.tiered import TieredGraph
+        sealed_before = (np.asarray(cbl.sealed)
+                         if isinstance(cbl, TieredGraph) else None)
+
         grow_retries = 0
         while True:
             new_cbl, ustats = batch_update_stats(cbl, src2, dst2, w2, op2)
@@ -309,15 +333,22 @@ class GraphService:
             grow_retries += 1
             self.stats.grows += 1
         cbl = new_cbl
+        if sealed_before is not None:
+            # writes into the sealed tier moved their vertices back to the
+            # delta inside batch_update_stats — surface that in the stats
+            self.stats.unseals += int(
+                (sealed_before & ~np.asarray(cbl.sealed)).sum())
 
-        # post-apply maintenance (fragmentation repair)
+        # post-apply maintenance (fragmentation repair / cold-vertex seal)
         action = maint.decide(cbl, pending_inserts=0, policy=self._policy)
-        if action.kind in ("compact", "rebuild", "grow"):
+        if action.kind in ("compact", "rebuild", "grow", "seal"):
             cbl = maint.apply_action(cbl, action, self._policy)
             if action.kind == "compact":
                 self.stats.compacts += 1
             elif action.kind == "rebuild":
                 self.stats.rebuilds += 1
+            elif action.kind == "seal":
+                self.stats.seals += 1
             else:
                 self.stats.grows += 1
 

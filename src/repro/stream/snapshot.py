@@ -10,6 +10,13 @@ immutable core are the cheap path to snapshot isolation).
 ``epoch`` counts flushes+maintenance; ``watermark`` is the absolute log
 sequence number applied into this version — a reader can tell exactly which
 updates its view contains (`query results are as-of watermark w`).
+
+Tiered storage pins one more coordinate: ``run_version`` counts seal/unseal
+repartitions of a :class:`~repro.core.tiered.TieredGraph`, so a tiered view
+is identified by the triple ``(run_version, epoch, watermark)`` — which CSR
+run generation, which storage version, which log prefix.  The read paths
+below stay unchanged: ``read_edges`` / ``v_deg`` / ``sample_subgraph`` all
+dispatch on the storage type and union both tiers internally.
 """
 from __future__ import annotations
 
@@ -24,10 +31,11 @@ from repro.graph.sampler import SampledGraph, sample_subgraph
 
 
 class Snapshot(NamedTuple):
-    cbl: CBList           # or a distributed.graph.ShardedCBList — both expose
+    cbl: CBList           # or a ShardedCBList / TieredGraph — all expose
                           # the vertex-table surface the read paths consume
     epoch: jax.Array      # i32[] version counter (bumps per flush/maintenance)
     watermark: jax.Array  # i32[] log sequence applied into this version
+    run_version: int = 0  # sealed-tier generation (0 for untiered storage)
 
     @property
     def num_edges(self) -> jax.Array:
@@ -40,16 +48,29 @@ class Snapshot(NamedTuple):
         which interleaved flush their read landed on."""
         return int(self.epoch), int(self.watermark)
 
+    @property
+    def tier_version(self) -> Tuple[int, int, int]:
+        """``(run_version, epoch, watermark)`` — the full tiered identity:
+        which sealed-run generation, which storage version, which log
+        prefix.  Untiered storage pins run_version 0 forever."""
+        return int(self.run_version), int(self.epoch), int(self.watermark)
+
+
+def _run_version_of(cbl) -> int:
+    return int(getattr(cbl, "run_version", 0))
+
 
 def snapshot_of(cbl: CBList, epoch: int = 0, watermark: int = 0) -> Snapshot:
     return Snapshot(cbl=cbl, epoch=jnp.asarray(epoch, jnp.int32),
-                    watermark=jnp.asarray(watermark, jnp.int32))
+                    watermark=jnp.asarray(watermark, jnp.int32),
+                    run_version=_run_version_of(cbl))
 
 
 def advance(snap: Snapshot, cbl: CBList, watermark: jax.Array) -> Snapshot:
     """New version: updated storage, bumped epoch, new applied watermark."""
     return Snapshot(cbl=cbl, epoch=snap.epoch + 1,
-                    watermark=jnp.asarray(watermark, jnp.int32))
+                    watermark=jnp.asarray(watermark, jnp.int32),
+                    run_version=_run_version_of(cbl))
 
 
 # ---- batched read path (all served from the pinned version) ---------------

@@ -1,0 +1,143 @@
+"""Unit tests for the CSR library (repro.core.csr) — the sealed cold tier
+and the bench baseline share this one implementation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.blockstore import NULL
+from repro.core.csr import (csr_build, csr_build_counted, csr_degrees,
+                            csr_empty, csr_in_degrees, csr_pagerank_sweep,
+                            csr_pull, csr_push, csr_push_feat, csr_query,
+                            csr_sample_neighbors, csr_to_coo)
+
+SRC = jnp.array([0, 0, 1, 2, 3, 3, 3], jnp.int32)
+DST = jnp.array([1, 2, 2, 3, 0, 1, 2], jnp.int32)
+W = jnp.array([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0], jnp.float32)
+NV = 5
+
+
+def _ref_push(x, combine="sum"):
+    out = {"sum": np.zeros(NV), "min": np.full(NV, np.inf),
+           "max": np.full(NV, -np.inf)}[combine]
+    red = {"sum": np.add, "min": np.minimum, "max": np.maximum}[combine]
+    for s, d, w in zip(np.asarray(SRC), np.asarray(DST), np.asarray(W)):
+        out[d] = red(out[d], float(x[s]) * w)
+    return out
+
+
+def test_build_and_degrees():
+    g = csr_build(SRC, DST, W, NV)
+    assert int(g.num_edges) == 7
+    assert np.array_equal(np.asarray(csr_degrees(g)), [2, 1, 1, 3, 0])
+    assert np.array_equal(np.asarray(csr_in_degrees(g)), [1, 2, 3, 1, 0])
+    # lanes are (src, dst)-sorted with padding keyed past the last vertex
+    live = np.asarray(g.row) != NV
+    assert np.all(np.asarray(g.row)[live][:-1] <= np.asarray(g.row)[live][1:])
+
+
+def test_build_capacity_padding_and_overflow():
+    g = csr_build(SRC, DST, W, NV, capacity=16)
+    assert g.capacity == 16 and int(g.num_edges) == 7
+    with pytest.raises(ValueError, match="exceed"):
+        csr_build(SRC, DST, W, NV, capacity=4)
+    g2, dropped = csr_build_counted(SRC, DST, W, NV, capacity=4)
+    assert int(dropped) == 3 and int(g2.num_edges) == 4
+
+
+def test_build_valid_mask():
+    valid = jnp.array([True, False, True, True, False, True, True])
+    g = csr_build(SRC, DST, W, NV, valid=valid)
+    assert int(g.num_edges) == 5
+    f, _ = csr_query(g, SRC, DST)
+    assert np.array_equal(np.asarray(f), np.asarray(valid))
+
+
+def test_query_hits_misses_and_out_of_range():
+    g = csr_build(SRC, DST, W, NV)
+    f, w = csr_query(g, SRC, DST)
+    assert bool(f.all())
+    np.testing.assert_allclose(np.asarray(w), np.asarray(W))
+    qs = jnp.array([0, 4, -1, NV + 3], jnp.int32)
+    qd = jnp.array([3, 0, 0, 0], jnp.int32)
+    f, w = csr_query(g, qs, qd)
+    assert not bool(f.any()) and not np.asarray(w).any()
+
+
+def test_query_empty_run():
+    g = csr_empty(NV, 0)
+    f, w = csr_query(g, SRC, DST)
+    assert not bool(f.any())
+
+
+@pytest.mark.parametrize("combine", ["sum", "min", "max"])
+def test_push_semirings(combine):
+    g = csr_build(SRC, DST, W, NV)
+    x = jnp.arange(1, NV + 1, dtype=jnp.float32)
+    y = csr_push(g, x, combine=combine)
+    np.testing.assert_allclose(np.asarray(y), _ref_push(np.asarray(x),
+                                                        combine), atol=1e-6)
+
+
+def test_push_active_mask_and_pull():
+    g = csr_build(SRC, DST, W, NV)
+    x = jnp.arange(1, NV + 1, dtype=jnp.float32)
+    active = jnp.array([True, False, True, False, True])
+    y = csr_push(g, x, active)
+    ref = np.zeros(NV)
+    for s, d, w in zip(np.asarray(SRC), np.asarray(DST), np.asarray(W)):
+        if active[s]:
+            ref[d] += float(x[s]) * w
+    np.testing.assert_allclose(np.asarray(y), ref, atol=1e-6)
+    # pull: y[src] = sum over out-edges of x[dst] * w
+    yp = csr_pull(g, x)
+    refp = np.zeros(NV)
+    for s, d, w in zip(np.asarray(SRC), np.asarray(DST), np.asarray(W)):
+        refp[s] += float(x[d]) * w
+    np.testing.assert_allclose(np.asarray(yp), refp, atol=1e-6)
+
+
+def test_push_feat():
+    g = csr_build(SRC, DST, W, NV)
+    x = jnp.arange(NV * 3, dtype=jnp.float32).reshape(NV, 3)
+    y = csr_push_feat(g, x)
+    ref = np.zeros((NV, 3))
+    for s, d, w in zip(np.asarray(SRC), np.asarray(DST), np.asarray(W)):
+        ref[d] += np.asarray(x[s]) * w
+    np.testing.assert_allclose(np.asarray(y), ref, atol=1e-5)
+    yu = csr_push_feat(g, x, weighted=False)
+    refu = np.zeros((NV, 3))
+    for s, d in zip(np.asarray(SRC), np.asarray(DST)):
+        refu[d] += np.asarray(x[s])
+    np.testing.assert_allclose(np.asarray(yu), refu, atol=1e-5)
+
+
+def test_pagerank_sweep_matches_push():
+    g = csr_build(SRC, DST, W, NV)
+    x = jnp.arange(1, NV + 1, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(csr_pagerank_sweep(g, x)),
+                               np.asarray(csr_push(g, x)))
+
+
+def test_to_coo_roundtrip():
+    g = csr_build(SRC, DST, W, NV, capacity=16)
+    s, d, w, ok = csr_to_coo(g)
+    assert int(ok.sum()) == 7
+    g2 = csr_build(s, d, w, NV, valid=ok)
+    f, w2 = csr_query(g2, SRC, DST)
+    assert bool(f.all())
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(W))
+
+
+def test_sample_neighbors():
+    g = csr_build(SRC, DST, W, NV)
+    verts = jnp.array([0, 3, 4, -1], jnp.int32)
+    out, valid = csr_sample_neighbors(g, verts, jax.random.key(0), 4)
+    out, valid = np.asarray(out), np.asarray(valid)
+    adj = {0: {1, 2}, 3: {0, 1, 2}}
+    for i, v in enumerate([0, 3, 4, -1]):
+        if v in adj:
+            assert valid[i].all()
+            assert set(out[i]) <= adj[v]
+        else:
+            assert not valid[i].any() and (out[i] == NULL).all()
