@@ -5,6 +5,11 @@ machine-readable ``BENCH_<name>.json`` (same rows + the module's summary
 dict) so CI runs accumulate a perf trajectory.  Scale with
 REPRO_BENCH_SCALE (default 1.0; CI uses 0.25).
 
+Every dump carries a ``"meta"`` key stamped once at harness start (git
+sha, backend, device count, bench scale, wall timestamp) so BENCH files
+from different PRs/commits are comparable; the timestamp is taken here on
+the host and passed down — never inside timed code.
+
   Fig 10 -> bench_query      Fig 11 -> bench_analysis
   Fig 12 -> bench_update     Fig 13 -> bench_batchsize
   Fig 14 / Table 3 -> bench_interleave
@@ -16,12 +21,38 @@ REPRO_BENCH_SCALE (default 1.0; CI uses 0.25).
   §Roofline (dry-run derived) -> roofline (requires experiments/dryrun/)
 """
 import json
+import os
+import subprocess
 import sys
+import time
 import traceback
 
+BENCH_META_SCHEMA = 1
 
-def _dump(short: str, rows, summary) -> None:
-    payload = {"bench": short, "rows": rows}
+
+def bench_meta() -> dict:
+    """Run metadata stamped into every BENCH_*.json (computed once, on the
+    host, before any bench runs)."""
+    import jax
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        sha = "unknown"
+    return {
+        "schema": BENCH_META_SCHEMA,
+        "git_sha": sha,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "bench_scale": float(os.environ.get("REPRO_BENCH_SCALE", "1.0")),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }
+
+
+def _dump(short: str, rows, summary, meta: dict) -> None:
+    payload = {"bench": short, "meta": meta, "rows": rows}
     if isinstance(summary, dict):
         payload["summary"] = {
             k: v for k, v in summary.items()
@@ -33,10 +64,12 @@ def _dump(short: str, rows, summary) -> None:
 
 
 def main() -> None:
+    import repro.obs as obs
     from benchmarks import (bench_analysis, bench_batchsize, bench_interleave,
                             bench_program, bench_query, bench_serve,
                             bench_shard, bench_stream, bench_tier,
                             bench_update, common)
+    meta = bench_meta()
     print("name,us_per_call,derived")
     ok = True
     for mod in (bench_query, bench_analysis, bench_update, bench_batchsize,
@@ -51,7 +84,7 @@ def main() -> None:
             print(f"{mod.__name__},FAILED,", file=sys.stderr)
             traceback.print_exc()
             continue
-        _dump(short, common.ROWS[start:], summary)
+        _dump(short, common.ROWS[start:], summary, meta)
     try:
         from pathlib import Path
 
@@ -59,13 +92,17 @@ def main() -> None:
         if Path("experiments/dryrun").exists():
             start = len(common.ROWS)
             roofline.run()
-            _dump("roofline", common.ROWS[start:], None)
+            _dump("roofline", common.ROWS[start:], None, meta)
         else:
             print("roofline,skipped,no experiments/dryrun (run "
                   "python -m repro.launch.dryrun --all first)")
     except Exception:
         ok = False
         traceback.print_exc()
+    if obs.enabled():
+        # REPRO_OBS=1 runs leave a Perfetto-loadable trace of everything
+        # the benches dispatched next to the BENCH files
+        print(f"wrote {obs.dump_trace('TRACE_bench.json')}", file=sys.stderr)
     if not ok:
         raise SystemExit(1)
 

@@ -1,0 +1,111 @@
+"""Produce a sample observability trace: TRACE_flush.json + obs.report().
+
+Runs a small but representative workload with telemetry live — a sharded
+(n_shards=2) :class:`GraphService` through several apply/flush cycles
+(admission → coalesce → per-shard upsert → maintenance), a tuner plan
+decision, an analytics pass, and a short :class:`ServeFrontend` replay —
+then dumps the span buffer as Chrome/Perfetto ``trace_event`` JSON and
+prints a condensed ``obs.report()``.
+
+Load the output at https://ui.perfetto.dev (or chrome://tracing).  This is
+the acceptance demo for the obs layer and the CI trace artifact producer:
+
+    REPRO_OBS=1 python -m benchmarks.trace_sample
+
+(obs is force-enabled programmatically too, so plain invocation works.)
+"""
+import json
+import sys
+
+import numpy as np
+
+import repro.obs as obs
+from benchmarks.common import dataset
+from repro.core import DELETE, INSERT
+from repro.core.tuner import ServePlan
+from repro.serve import DegreeRead, ManualClock, PointRead, ServeFrontend
+from repro.stream import GraphService
+
+TRACE_PATH = "TRACE_flush.json"
+N_CYCLES = 3
+BATCH = 192
+
+
+def run(trace_path: str = TRACE_PATH) -> dict:
+    obs.enable()
+    obs.reset()
+    rng = np.random.default_rng(7)
+    nv, src, dst, w = dataset("rmat_tiny")
+    svc = GraphService.from_coo(np.asarray(src), np.asarray(dst),
+                                np.asarray(w), num_vertices=nv,
+                                log_capacity=1024, n_shards=2)
+
+    # streamed apply/flush cycles: admission -> coalesce -> per-shard
+    # upsert -> maintenance, all under spans
+    for _ in range(N_CYCLES):
+        us = rng.integers(0, nv, BATCH).astype(np.int32)
+        ud = rng.integers(0, nv, BATCH).astype(np.int32)
+        uw = rng.random(BATCH).astype(np.float32) + 0.1
+        op = np.where(rng.random(BATCH) < 0.2, DELETE, INSERT).astype(np.int32)
+        svc.apply(us, ud, uw, op)
+        svc.flush()
+
+    # a tuner decision (lands in the structured decision log)
+    svc.plan("scan_all")
+
+    # one analytics pass so device work shows up next to flush spans
+    with obs.span("analytics.pagerank", cat="analytics"):
+        obs.wait(svc.analytics("pagerank"), name="analytics.sync")
+
+    # short serve replay: QPS/latency series join the same registry
+    plan = ServePlan(bucket_set=(32, 64, 128),
+                     windows={"interactive": 0.001, "standard": 0.004,
+                              "batch": 0.020},
+                     flush_pending_max=1024, arrival_lanes_per_s=0.0)
+    clock = ManualClock()
+    front = ServeFrontend(svc, plan, clock=clock)
+    front.register_tenant("demo")
+    for _ in range(64):
+        clock.advance(float(rng.exponential(1.0 / 500.0)))
+        size = int(rng.integers(4, 17))
+        if rng.random() < 0.7:
+            i = rng.integers(0, len(src), size)
+            front.submit(PointRead(qsrc=np.asarray(src)[i],
+                                   qdst=np.asarray(dst)[i], tenant="demo"))
+        else:
+            front.submit(DegreeRead(verts=rng.integers(0, nv, size),
+                                    tenant="demo"))
+        front.step()
+    front.drain(flush=True)
+
+    path = obs.dump_trace(trace_path)
+    report = obs.report()
+    return {"trace_path": path, "report": report}
+
+
+def main() -> None:
+    out = run()
+    rep = out["report"]
+    names = sorted(rep["spans"])
+    print(f"wrote {out['trace_path']} "
+          f"({rep['trace_events']} events, {rep['trace_dropped']} dropped)",
+          file=sys.stderr)
+    summary = {
+        "trace": out["trace_path"],
+        "span_names": names,
+        "decisions": [d["kind"] for d in rep["decisions"]],
+        "counters": {k: v for k, v in
+                     sorted(rep["metrics"]["counters"].items())},
+        "flush_upsert_series": sorted(
+            k for k in rep["metrics"]["series"] if "flush.upsert" in k),
+    }
+    json.dump(summary, sys.stdout, indent=1, default=float)
+    print()
+    # sanity: the flush phases the trace must break out
+    for need in ("flush.admission", "flush.coalesce", "flush.upsert.shard",
+                 "flush.maintenance"):
+        assert need in rep["spans"], f"missing span {need!r} in trace"
+
+
+if __name__ == "__main__":
+    main()

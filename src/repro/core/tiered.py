@@ -54,6 +54,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as obs
 from repro.core.blockstore import NULL
 from repro.core.cblist import CBList, blocks_needed, build_from_coo, to_coo
 from repro.core.csr import (CSRGraph, _csr_build, csr_build, csr_degrees,
@@ -350,7 +351,31 @@ def _repartition(tg: TieredGraph, new_sealed: jax.Array) -> TieredGraph:
     The delta's block capacity is re-sized to the remaining hot demand
     (power-of-two rounded, ``DELTA_SLACK`` headroom) — sealing must *shrink*
     the delta or the fixed-shape sweep would keep paying for sealed lanes.
+
+    Under :mod:`repro.obs`: one blocking ``tier.repartition`` span (this is
+    the 72ms/repartition cost the ROADMAP's tier-compaction follow-up
+    chases), a ``tier.repartition_s`` series, and the ``tier.sealed_fraction``
+    gauge refreshed on the result.
     """
+    with obs.span("tier.repartition", cat="tier",
+                  n_sealed=int(np.asarray(new_sealed).sum())) as sp:
+        out = _repartition_inner(tg, new_sealed)
+        if obs.enabled():
+            jax.block_until_ready(jax.tree.leaves(out))
+    obs.series("tier.repartition_s").observe(sp.get("dur", 0.0))
+    obs.counter("tier.repartitions").inc()
+    if obs.enabled():
+        obs.gauge("tier.sealed_fraction").set(float(out.sealed_fraction))
+        obs.gauge("tier.delta_blocks").set(_delta_blocks(out))
+    return out
+
+
+def _delta_blocks(tg: TieredGraph) -> int:
+    d = tg.delta
+    return d.store.num_blocks if isinstance(d, CBList) else d.num_blocks
+
+
+def _repartition_inner(tg: TieredGraph, new_sealed: jax.Array) -> TieredGraph:
     nvc = tg.capacity_vertices
     bw = tg.block_width
     sealed_np = np.asarray(new_sealed)
@@ -406,16 +431,22 @@ def seal(tg: TieredGraph, mask: jax.Array) -> TieredGraph:
     Loss-free by construction: both tiers are extracted through the counted
     COO paths and rebuilt at exact (power-of-two-rounded) capacity."""
     mask = jnp.asarray(mask, bool)
+    n_new = int((mask & ~tg.sealed).sum())
     if not bool(mask.any()):
         return tg
+    obs.counter("seal.seal_count", reason="policy",
+                bucket=obs.count_bucket(n_new)).inc(n_new)
     return _repartition(tg, tg.sealed | mask)
 
 
 def unseal(tg: TieredGraph, mask: jax.Array) -> TieredGraph:
     """Move the vertices in ``mask`` back into the delta (host-side)."""
     mask = jnp.asarray(mask, bool)
-    if not bool((tg.sealed & mask).any()):
+    n_hit = int((tg.sealed & mask).sum())
+    if not n_hit:
         return tg
+    obs.counter("seal.unseal_count", reason="manual",
+                bucket=obs.count_bucket(n_hit)).inc(n_hit)
     return _repartition(tg, tg.sealed & ~mask)
 
 
@@ -462,9 +493,15 @@ def tiered_batch_update_stats(tg: TieredGraph, src: jax.Array,
     if op is None:
         op = jnp.full(src.shape, INSERT, jnp.int32)
     touched = _touched_sealed(tg, src, op != NOP)
-    if bool(touched.any()):
+    n_hit = int(touched.sum())
+    if n_hit:
+        # write-triggered promotion back into the delta: the churn signal
+        # the seal policy must not fight (seal.unseal_count{reason=write})
+        obs.counter("seal.unseal_count", reason="write",
+                    bucket=obs.count_bucket(n_hit)).inc(n_hit)
         tg = _repartition(tg, tg.sealed & ~touched)
-    delta, stats = batch_update_stats(tg.delta, src, dst, w, op)
+    with obs.span("tier.delta_update", cat="tier"):
+        delta, stats = batch_update_stats(tg.delta, src, dst, w, op)
     return _stamp(tg, src, op != NOP, delta), stats
 
 
@@ -476,7 +513,10 @@ def tiered_upsert_edges(tg: TieredGraph, src, dst, w=None,
     if valid is None:
         valid = jnp.ones(src.shape, bool)
     touched = _touched_sealed(tg, src, valid)
-    if bool(touched.any()):
+    n_hit = int(touched.sum())
+    if n_hit:
+        obs.counter("seal.unseal_count", reason="write",
+                    bucket=obs.count_bucket(n_hit)).inc(n_hit)
         tg = _repartition(tg, tg.sealed & ~touched)
     delta = upsert_edges(tg.delta, src, dst, w, valid)
     return _stamp(tg, src, valid, delta)

@@ -32,6 +32,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+import repro.obs as obs
 from repro.core import blockstore as bs
 from repro.core.cblist import CBList
 
@@ -108,9 +109,15 @@ def choose_plan(cbl, task, probe: Optional[SystemProbe] = None,
         plan = choose_plan(cbl.delta, task, probe, on_tpu=on_tpu)
         run_impl = ("pallas" if on_tpu and task == "scan_all"
                     and cbl.run_capacity >= MIN_PALLAS_LANES else "xla")
-        return dataclasses.replace(
+        plan = dataclasses.replace(
             plan, run_impl=run_impl,
             sealed_fraction=float(cbl.sealed_fraction))
+        obs.decision("choose_plan.tiered", task=str(task), run_impl=run_impl,
+                     sealed_fraction=round(plan.sealed_fraction, 4),
+                     run_capacity=int(cbl.run_capacity),
+                     rule=("run lanes >= pallas floor" if run_impl == "pallas"
+                           else "run lanes below pallas floor or off-TPU"))
+        return plan
     if isinstance(cbl, CBList):
         n_shards = 1
         cut = 0.0
@@ -140,13 +147,17 @@ def choose_plan(cbl, task, probe: Optional[SystemProbe] = None,
     exposed = c_m_eff * (1.0 - contiguity)
     if exposed < probe.scalar_prefetch_overhead_us:
         strategy = "all_hard"            # hardware-analogue pipeline suffices
+        rule = "exposed C_m*(1-P_h) below prefetch setup cost"
     elif task == "batch_update" or task == "query":
         # pointer-chasing chains dominate; prefetch the cold heads
         strategy = "hybrid_hot"
+        rule = "pointer-chasing task: prefetch cold chain heads"
     elif frac_chunks > 0.9:
         strategy = "hybrid_block"        # chunks contiguous; chains prefetched
+        rule = "small-chunk share > 0.9: contiguous chunks, prefetch chains"
     else:
         strategy = "all_soft"
+        rule = "exposed latency dominates: prefetch everywhere"
 
     # engine impl: the scalar-prefetched kernels only pay when (a) a real
     # TPU pipeline exists, (b) the sweep is dense enough to amortize the
@@ -162,6 +173,11 @@ def choose_plan(cbl, task, probe: Optional[SystemProbe] = None,
         "choose_plan task=%s strategy=%s impl=%s n_shards=%d "
         "contiguity=%.3f cut_fraction=%.3f exposed_us=%.3f",
         task, strategy, impl, n_shards, contiguity, cut, exposed)
+    obs.decision("choose_plan", task=str(task), strategy=strategy, impl=impl,
+                 partition=partition, rule=rule, n_shards=n_shards,
+                 contiguity=round(contiguity, 4),
+                 cut_fraction=round(cut, 4), exposed_us=round(exposed, 4),
+                 lanes=int(lanes), lookahead=lookahead, on_tpu=bool(on_tpu))
     return plan
 
 
@@ -247,6 +263,14 @@ def choose_serve_plan(arrival_qps: float, mean_lanes_per_request: float = 8.0,
         "choose_serve_plan qps=%.1f lanes/s=%.1f buckets=%s windows=%s "
         "flush_pending_max=%d", arrival_qps, lane_rate, plan.bucket_set,
         {k: round(v, 4) for k, v in windows.items()}, plan.flush_pending_max)
+    obs.decision("choose_serve_plan", arrival_qps=round(arrival_qps, 2),
+                 lanes_per_s=round(lane_rate, 2),
+                 bucket_set=list(plan.bucket_set),
+                 windows={k: round(v, 5) for k, v in windows.items()},
+                 flush_pending_max=plan.flush_pending_max,
+                 rule=f"fill largest bucket to {SERVE_TARGET_OCCUPANCY:g} "
+                      f"occupancy inside class clamps (ladder capped by "
+                      f"watermarked log admission)")
     return plan
 
 

@@ -262,13 +262,19 @@ def batch_update_stats(cbl, src: jax.Array, dst: jax.Array,
     edges) — grow capacity and re-apply the batch to the *pre-update* CBList
     for loss-free semantics (pure updates make the retry exact).
 
-    A ShardedCBList routes each record to its source's owning shard.
+    A ShardedCBList routes each record to its source's owning shard; under
+    :mod:`repro.obs` the sharded path switches to the per-shard traced
+    variant (identical result, per-shard spans + routing counters).
     """
     if not isinstance(cbl, CBList):
         from repro.core.tiered import TieredGraph, tiered_batch_update_stats
         if isinstance(cbl, TieredGraph):
             return tiered_batch_update_stats(cbl, src, dst, w, op)
-        from repro.distributed.graph import sharded_batch_update_stats
+        import repro.obs as obs
+        from repro.distributed.graph import (
+            sharded_batch_update_stats, sharded_batch_update_stats_traced)
+        if obs.enabled():
+            return sharded_batch_update_stats_traced(cbl, src, dst, w, op)
         return sharded_batch_update_stats(cbl, src, dst, w, op)
     return _batch_update_stats(cbl, src, dst, w, op)
 

@@ -456,6 +456,56 @@ def sharded_batch_update_stats(scbl: ShardedCBList, src: jax.Array,
     return dataclasses.replace(scbl, shards=new_shards), agg
 
 
+def sharded_batch_update_stats_traced(scbl: ShardedCBList, src: jax.Array,
+                                      dst: jax.Array,
+                                      w: Optional[jax.Array] = None,
+                                      op: Optional[jax.Array] = None
+                                      ) -> Tuple[ShardedCBList, UpdateStats]:
+    """Observed-mode :func:`sharded_batch_update_stats`: identical routing
+    and result, but shards apply *sequentially* so each shard's upsert gets
+    its own measured span — the diagnosis tool for the sharded write-path
+    collapse (ROADMAP: 545 -> 49 updates/s at 2 shards needs per-shard
+    timing, which the vmapped fast path fuses into one opaque dispatch).
+
+    Per shard: a ``flush.upsert.shard`` span (blocking, so device time is
+    attributed to the shard that spent it), a ``flush.routed_lanes{shard=k}``
+    counter of records routed there, and a ``flush.upsert_s{shard=k}``
+    series for :func:`repro.obs.report`.  Updates never cross the cut, so
+    the sequential per-shard application is bit-identical to the vmap.
+    """
+    import repro.obs as obs
+    from repro.core.updates import INSERT
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    if w is None:
+        w = jnp.ones(src.shape, jnp.float32)
+    if op is None:
+        op = jnp.full(src.shape, INSERT, jnp.int32)
+    nvc = scbl.capacity_vertices
+    with obs.span("flush.route", cat="shard", lanes=int(src.shape[0])):
+        owner = np.asarray(scbl.v_shard)[np.clip(np.asarray(src), 0, nvc - 1)]
+        op_np = np.asarray(op)
+    shards_out, stats_out = [], []
+    for k in range(scbl.n_shards):
+        lanes = int(((owner == k) & (op_np != NOP)).sum())
+        obs.counter("flush.routed_lanes", shard=k).inc(lanes)
+        ops_k = jnp.where(jnp.asarray(owner == k), op, NOP)
+        with obs.span("flush.upsert.shard", cat="shard", shard=k,
+                      lanes=lanes) as sp:
+            new_shard, st = _batch_update_stats(shard_at(scbl, k),
+                                                src, dst, w, ops_k)
+            jax.block_until_ready(new_shard)
+        obs.series("flush.upsert_s", shard=k).observe(sp.get("dur", 0.0))
+        shards_out.append(new_shard)
+        stats_out.append(st)
+    agg = UpdateStats(
+        dropped_edges=sum(s.dropped_edges for s in stats_out),
+        applied_inserts=sum(s.applied_inserts for s in stats_out),
+        applied_deletes=sum(s.applied_deletes for s in stats_out))
+    return dataclasses.replace(
+        scbl, shards=_restack(shards_out, scbl.mesh)), agg
+
+
 @jax.jit
 def sharded_read_edges(scbl: ShardedCBList, qsrc: jax.Array, qdst: jax.Array
                        ) -> Tuple[jax.Array, jax.Array]:

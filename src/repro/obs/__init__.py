@@ -1,0 +1,163 @@
+"""``repro.obs`` — unified tracing, metrics, and profiling facade.
+
+GastCoCo's design came out of *measurement* (the cache-miss profile of
+existing dynamic-graph systems preceded CBList and the coroutine schedule);
+this module gives the repo the same instrument: one process-local place
+where storage, maintenance, sharding, the tuner, and the serve frontend
+report what they did and how long it took.
+
+    import repro.obs as obs
+
+    obs.enable()                        # or REPRO_OBS=1 in the environment
+    service.flush()                     # hot paths are pre-instrumented
+    obs.report()                        # nested dict: metrics + spans +
+                                        # structured decision log
+    obs.dump_trace("trace.json")        # load in https://ui.perfetto.dev
+
+Three pieces:
+
+  * a global :class:`~repro.obs.metrics.Registry` (counters / gauges /
+    fixed-bucket histograms / percentile series, labeled);
+  * a global :class:`~repro.obs.trace.Tracer` (host spans with explicit
+    jit-boundary attribution — see :meth:`wait` — and Chrome/Perfetto
+    export);
+  * this facade, which gates both behind one switch so the disabled path
+    costs a single flag check and a shared no-op object per call site
+    (acceptance bar: < 2% on ``bench_stream`` flush throughput).
+
+Enabling is dynamic (``enable()`` / ``disable()``), and ``REPRO_OBS=1``
+turns it on at import so benches and CI runs opt in from the environment.
+``REPRO_OBS_JAX=1`` additionally mirrors every span into
+``jax.profiler.TraceAnnotation`` so host phase names appear inside device
+profiler captures.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Optional
+
+from repro.obs import metrics as metrics_mod
+from repro.obs.metrics import (NULL, Registry, count_bucket, delta,
+                               guarded_percentiles, percentile_min_n)
+from repro.obs.trace import NULL_SPAN, Tracer
+
+__all__ = [
+    "enabled", "enable", "disable", "registry", "tracer", "set_clock",
+    "counter", "gauge", "histogram", "series", "span", "wait", "instant",
+    "decision", "report", "dump_trace", "reset",
+    "Registry", "Tracer", "count_bucket", "delta", "guarded_percentiles",
+    "percentile_min_n",
+]
+
+
+def _env_flag(name: str) -> bool:
+    return os.environ.get(name, "").lower() not in ("", "0", "false", "off")
+
+
+_enabled = _env_flag("REPRO_OBS")
+_registry = Registry()
+_tracer = Tracer(jax_annotations=_env_flag("REPRO_OBS_JAX"))
+
+
+# ---- switches --------------------------------------------------------------
+
+def enabled() -> bool:
+    return _enabled
+
+
+def enable(on: bool = True) -> None:
+    global _enabled
+    _enabled = bool(on)
+
+
+def disable() -> None:
+    enable(False)
+
+
+def registry() -> Registry:
+    return _registry
+
+
+def tracer() -> Tracer:
+    return _tracer
+
+
+def set_clock(clock: Callable[[], float]) -> None:
+    """Inject a virtual clock into the tracer (tests, trace replay)."""
+    _tracer.clock = clock
+
+
+# ---- metric accessors (null objects when disabled) ------------------------
+
+def counter(name: str, **labels):
+    return _registry.counter(name, **labels) if _enabled else NULL
+
+
+def gauge(name: str, **labels):
+    return _registry.gauge(name, **labels) if _enabled else NULL
+
+
+def histogram(name: str, buckets=metrics_mod.DEFAULT_BUCKETS, **labels):
+    return (_registry.histogram(name, buckets, **labels)
+            if _enabled else NULL)
+
+
+def series(name: str, maxlen: int = metrics_mod.DEFAULT_SERIES_WINDOW,
+           **labels):
+    return _registry.series(name, maxlen, **labels) if _enabled else NULL
+
+
+# ---- tracing ---------------------------------------------------------------
+
+def span(name: str, cat: str = "host", **args):
+    """Span context manager; a shared no-op when disabled."""
+    return _tracer.span(name, cat=cat, **args) if _enabled else NULL_SPAN
+
+
+def wait(x, name: str = "device.sync", **args):
+    """Attribute device time explicitly at a jit boundary: blocks on ``x``
+    under a ``cat="device"`` span when enabled, returns ``x`` untouched
+    (without blocking) when disabled."""
+    if _enabled:
+        return _tracer.wait(x, name, **args)
+    return x
+
+
+def instant(name: str, cat: str = "host", **args) -> None:
+    if _enabled:
+        _tracer.instant(name, cat=cat, **args)
+
+
+def decision(kind: str, **fields) -> None:
+    """Record a structured decision (tuner plan, maintenance action): one
+    registry log entry plus an instant trace marker."""
+    if _enabled:
+        _registry.decision(kind, **fields)
+        _tracer.instant(kind, cat="decision", **fields)
+
+
+# ---- reporting -------------------------------------------------------------
+
+def report() -> dict:
+    """The whole system's observability state as one nested dict:
+    registry snapshot (counters/gauges/histograms/series), per-span-name
+    timing aggregates, and the structured decision log."""
+    return {
+        "enabled": _enabled,
+        "metrics": _registry.snapshot(),
+        "spans": _tracer.aggregate(),
+        "decisions": list(_registry.decisions),
+        "trace_events": len(_tracer.events),
+        "trace_dropped": _tracer.dropped,
+    }
+
+
+def dump_trace(path: str) -> str:
+    """Write the recorded spans as Chrome/Perfetto ``trace_event`` JSON."""
+    return _tracer.dump(path)
+
+
+def reset() -> None:
+    """Clear all recorded state (metrics, spans, decisions)."""
+    _registry.reset()
+    _tracer.reset()

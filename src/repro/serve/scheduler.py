@@ -43,7 +43,9 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+import repro.obs as obs
 from repro.core.tuner import ServePlan, choose_serve_plan
+from repro.obs.metrics import Registry
 from repro.serve import overlay as ov
 from repro.serve.batcher import JitShapeStat, KindQueue, MicroBatch
 from repro.serve.request import Request, Ticket
@@ -100,8 +102,13 @@ class ServeFrontend:
         self._queues: Dict[Tuple[str, bool], KindQueue] = {}
         self._partials: Dict[int, _Partial] = {}
         self.shapes = JitShapeStat()
-        self._lat: Dict[Tuple[str, str], List[float]] = {}
-        self._kind_disp: Dict[str, List[float]] = {}   # occupancies per kind
+        # serving statistics live on a repro.obs metrics registry: the
+        # global one when observability is on (so obs.report() carries the
+        # QPS/p50/p99/occupancy series), a private always-on one otherwise
+        # (the frontend has always collected these — report() must work
+        # regardless of the global switch)
+        self.metrics: Registry = (obs.registry() if obs.enabled()
+                                  else Registry())
         self._tenant_span: Dict[str, List[float]] = {}  # [first_arr, last_done]
         self._completed = 0
         self._interleaved_flushes = 0
@@ -187,8 +194,11 @@ class ServeFrontend:
 
     def _flush(self) -> None:
         if self.service.pending_updates > 0:
-            self.service.flush()
+            with obs.span("serve.flush", cat="serve",
+                          pending=self.service.pending_updates):
+                self.service.flush()
             self._interleaved_flushes += 1
+            self.metrics.counter("serve.interleaved_flushes").inc()
 
     def _admit_queued_updates(self, now: float) -> None:
         """Force-admit every update still waiting in the frontend queue.
@@ -222,17 +232,21 @@ class ServeFrontend:
             self._run_analytics(mb, overlay, now)
             return
         self.shapes.record(mb.kind, mb.bucket)
-        self._kind_disp.setdefault(mb.kind, []).append(mb.occupancy)
-        if mb.kind == "update":
-            self._run_update(mb, now)
-        elif mb.kind == "point_read":
-            self._run_point(mb, overlay, now)
-        elif mb.kind == "degree_read":
-            self._run_degree(mb, overlay, now)
-        elif mb.kind == "khop":
-            self._run_khop(mb, overlay, now)
-        else:                                          # pragma: no cover
-            raise ValueError(f"unknown request kind {mb.kind!r}")
+        self.metrics.series("serve.occupancy", kind=mb.kind).observe(
+            mb.occupancy)
+        self.metrics.counter("serve.dispatches", kind=mb.kind).inc()
+        with obs.span("serve.dispatch", cat="serve", kind=mb.kind,
+                      bucket=mb.bucket, lanes=mb.lanes, overlay=overlay):
+            if mb.kind == "update":
+                self._run_update(mb, now)
+            elif mb.kind == "point_read":
+                self._run_point(mb, overlay, now)
+            elif mb.kind == "degree_read":
+                self._run_degree(mb, overlay, now)
+            elif mb.kind == "khop":
+                self._run_khop(mb, overlay, now)
+            else:                                      # pragma: no cover
+                raise ValueError(f"unknown request kind {mb.kind!r}")
 
     def _fuse(self, mb: MicroBatch, field, fill, dtype) -> np.ndarray:
         out = np.full((mb.bucket,), fill, dtype)
@@ -404,34 +418,46 @@ class ServeFrontend:
     def _record_done(self, ticket: Ticket, now: float) -> None:
         self._completed += 1
         req = ticket.request
-        self._lat.setdefault((req.tenant, req.latency_class),
-                             []).append(ticket.latency)
+        self.metrics.series("serve.latency_s", tenant=req.tenant,
+                            cls=req.latency_class).observe(ticket.latency)
+        self.metrics.counter("serve.completed", tenant=req.tenant).inc()
         span = self._tenant_span.setdefault(req.tenant, [ticket.t_arrival, now])
         span[1] = max(span[1], now)
 
     # ---- stats ------------------------------------------------------------
 
     def report(self) -> dict:
-        """Per-tenant / per-class / per-kind serving statistics."""
+        """Per-tenant / per-class / per-kind serving statistics.
+
+        Computed off the shared :mod:`repro.obs` metrics registry (the
+        ``serve.latency_s`` / ``serve.occupancy`` series), so when
+        observability is on the same numbers appear in ``obs.report()``.
+        Percentiles carry their sample count ``n`` and are *omitted* below
+        the minimum meaningful count (p50 needs 2 samples, p99 needs 100 —
+        a p99 over a dozen latencies is a noisy max, not a tail).
+        """
         tenants: Dict[str, dict] = {}
-        for (tenant, cls), lats in sorted(self._lat.items()):
+        for labels, s in self.metrics.collect("serve.latency_s"):
+            tenant, cls = labels["tenant"], labels["cls"]
             t = tenants.setdefault(tenant, {"requests": 0, "by_class": {}})
-            arr = np.asarray(lats)
-            t["requests"] += len(lats)
-            t["by_class"][cls] = {
-                "count": len(lats),
-                "p50_ms": float(np.percentile(arr, 50) * 1e3),
-                "p99_ms": float(np.percentile(arr, 99) * 1e3),
-            }
+            summ = s.summary(pcts=(50, 99))
+            t["requests"] += summ["n"]
+            entry = {"count": summ["n"], "n": summ["n"]}
+            if "p50" in summ:
+                entry["p50_ms"] = summ["p50"] * 1e3
+            if "p99" in summ:
+                entry["p99_ms"] = summ["p99"] * 1e3
+            t["by_class"][cls] = entry
         for tenant, t in tenants.items():
             a0, a1 = self._tenant_span.get(tenant, (0.0, 0.0))
             t["qps"] = t["requests"] / (a1 - a0) if a1 > a0 else float("inf")
         kinds = {}
         shape_rep = self.shapes.report()
-        for kind, occs in sorted(self._kind_disp.items()):
+        for labels, s in self.metrics.collect("serve.occupancy"):
+            kind = labels["kind"]
             kinds[kind] = {
-                "dispatches": len(occs),
-                "mean_occupancy": float(np.mean(occs)),
+                "dispatches": s.count,
+                "mean_occupancy": s.sum / s.count if s.count else 0.0,
                 **shape_rep.get(kind, {"jit_cache_size": 0, "buckets": []}),
             }
         svc = self.service.stats

@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as obs
 from repro.core import blockstore as bs
 from repro.core.blockstore import NULL
 from repro.core.cblist import CBList, block_fences, compact_cbl, grow, rebuild
@@ -106,7 +107,26 @@ def decide(cbl, pending_inserts: int = 0,
     per shard and the highest-priority shard action wins (grow > rebuild >
     compact) — a single shard near exhaustion must grow the whole stack,
     because shard shapes stay uniform.
+
+    Under :mod:`repro.obs` every top-level call emits exactly one
+    ``maint.decision{kind=...,phase=...}`` counter increment (phase
+    "proactive" for the headroom-only pre-flush call, "full" for the
+    post-apply decision) plus a decide span — the accounting the churn
+    tests assert on.
     """
+    phase = "proactive" if headroom_only else "full"
+    with obs.span("maint.decide", cat="maint", phase=phase):
+        action = _decide(cbl, pending_inserts, policy, headroom_only)
+    obs.counter("maint.decision", kind=action.kind, phase=phase).inc()
+    if action.kind != "none":
+        obs.decision("maint.decide", action=action.kind, phase=phase,
+                     reason=action.reason)
+    return action
+
+
+def _decide(cbl, pending_inserts: int = 0,
+            policy: MaintenancePolicy = MaintenancePolicy(),
+            headroom_only: bool = False) -> MaintenanceAction:
     if not isinstance(cbl, CBList):
         from repro.core.tiered import TieredGraph
         if isinstance(cbl, TieredGraph):
@@ -164,7 +184,7 @@ def _decide_tiered(tg, pending_inserts: int, policy: MaintenancePolicy,
     before a write batch would likely unseal straight back.  Otherwise a
     large-enough cold set outranks delta-local rebuild/compact.
     """
-    base = decide(tg.delta, pending_inserts, policy, headroom_only)
+    base = _decide(tg.delta, pending_inserts, policy, headroom_only)
     if headroom_only or base.kind == "grow" \
             or policy.seal_after_epochs is None:
         return base
@@ -234,9 +254,25 @@ def apply_action(cbl, action: MaintenanceAction,
     Sharded storage applies per shard: compact/rebuild are shape-preserving
     per-shard transforms, grow raises every shard to the same (per-shard)
     block target so the stack keeps uniform shapes.
+
+    Under :mod:`repro.obs` each applied action gets a blocking
+    ``maint.apply`` span (the action transforms are host-side and
+    shape-changing, so their cost is real wall time, not dispatch) and a
+    ``maint.action{kind=...}`` counter.
     """
     if action.kind == "none":
         return cbl
+    obs.counter("maint.action", kind=action.kind).inc()
+    with obs.span("maint.apply", cat="maint", kind=action.kind,
+                  reason=action.reason):
+        out = _apply_action(cbl, action, policy)
+        if obs.enabled():
+            jax.block_until_ready(jax.tree.leaves(out))
+    return out
+
+
+def _apply_action(cbl, action: MaintenanceAction,
+                  policy: MaintenancePolicy = MaintenancePolicy()):
     if not isinstance(cbl, CBList):
         from repro.core.tiered import TieredGraph
         if isinstance(cbl, TieredGraph):
@@ -280,4 +316,4 @@ def _apply_tiered(tg, action: MaintenanceAction, policy: MaintenancePolicy):
     if action.kind == "grow":
         return tiered_grow(tg, num_blocks=action.num_blocks or None,
                            vertex_capacity=action.vertex_capacity or None)
-    return _dc.replace(tg, delta=apply_action(tg.delta, action, policy))
+    return _dc.replace(tg, delta=_apply_action(tg.delta, action, policy))

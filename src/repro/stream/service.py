@@ -43,6 +43,7 @@ import jax.numpy as jnp
 
 import numpy as np
 
+import repro.obs as obs
 from repro.core.cblist import CBList, blocks_needed, build_from_coo
 from repro.core.program import (VertexProgram, get_program, has_program,
                                 run_program)
@@ -247,22 +248,27 @@ class GraphService:
                 None if w is None else jnp.asarray(w, jnp.float32),
                 None if op is None else jnp.asarray(op, jnp.int32),
                 None if valid is None else jnp.asarray(valid, bool))
-        self._log, receipt = ulog.append(self._log, *args,
-                                         high_watermark=self._high_watermark)
-        if not bool(receipt.admitted):
-            self.stats.rejected_batches += 1
-            if not self._auto_flush:
-                return receipt
-            self.flush()
+        with obs.span("service.apply", cat="flush",
+                      records=int(args[0].shape[0])):
             self._log, receipt = ulog.append(
                 self._log, *args, high_watermark=self._high_watermark)
             if not bool(receipt.admitted):
-                raise ValueError(
-                    f"update batch of {args[0].shape[0]} records cannot fit "
-                    f"an empty log of capacity {self._log.capacity} at "
-                    f"watermark {self._high_watermark}")
-        self.stats.admitted += int(receipt.appended)
-        self.stats.coalesced += int(receipt.coalesced)
+                self.stats.rejected_batches += 1
+                obs.counter("log.rejected_batches").inc()
+                if not self._auto_flush:
+                    return receipt
+                self.flush()
+                self._log, receipt = ulog.append(
+                    self._log, *args, high_watermark=self._high_watermark)
+                if not bool(receipt.admitted):
+                    raise ValueError(
+                        f"update batch of {args[0].shape[0]} records cannot "
+                        f"fit an empty log of capacity {self._log.capacity} "
+                        f"at watermark {self._high_watermark}")
+            self.stats.admitted += int(receipt.appended)
+            self.stats.coalesced += int(receipt.coalesced)
+            obs.counter("log.admitted").inc(int(receipt.appended))
+            obs.counter("log.coalesced").inc(int(receipt.coalesced))
         return receipt
 
     def flush(self) -> FlushReport:
@@ -270,26 +276,42 @@ class GraphService:
 
         Loss-free: the ``dropped_edges`` overflow counter triggers a
         capacity grow and an exact retry on the pre-update CBList.
+
+        Under :mod:`repro.obs` the flush is broken into phase spans —
+        admission (drain), coalesce, proactive headroom decide, upsert
+        (per-shard when sharded), grow-retries, and maintenance — with
+        matching counters, so a flush trace answers "where did this epoch's
+        time go" without printf archaeology.
         """
-        self._log, (s, d, w, op, valid) = ulog.drain(self._log)
-        watermark = int(self._log.head)
+        with obs.span("service.flush", cat="flush", epoch=self.epoch):
+            return self._flush_traced()
+
+    def _flush_traced(self) -> FlushReport:
+        with obs.span("flush.admission", cat="flush"):
+            self._log, (s, d, w, op, valid) = ulog.drain(self._log)
+            watermark = int(self._log.head)
         cbl = self._snap.cbl
 
-        # cross-append coalescing: the drained stream is FIFO, the last op
-        # per key is the net effect (append only coalesces within one batch)
-        keep = ulog._coalesce_mask(s, d, valid)
-        n_ins = int((keep & (op == INSERT)).sum())
+        with obs.span("flush.coalesce", cat="flush"):
+            # cross-append coalescing: the drained stream is FIFO, the last
+            # op per key is the net effect (append only coalesces within one
+            # batch)
+            keep = ulog._coalesce_mask(s, d, valid)
+            n_ins = int((keep & (op == INSERT)).sum())
 
-        # net topology removals = final-op DELETE keys that currently exist.
-        # The upsert framing below also "deletes" every re-inserted key, so
-        # UpdateStats.applied_deletes over-counts for the CC split signal —
-        # weight refreshes must not force cold CC restarts.
-        del_keys = keep & (op == DELETE)
-        if bool(del_keys.any()):
-            found, _ = read_edges(cbl, s, d)
-            net_deletes = int((del_keys & found).sum())
-        else:
-            net_deletes = 0
+            # net topology removals = final-op DELETE keys that currently
+            # exist.  The upsert framing below also "deletes" every
+            # re-inserted key, so UpdateStats.applied_deletes over-counts
+            # for the CC split signal — weight refreshes must not force
+            # cold CC restarts.
+            del_keys = keep & (op == DELETE)
+            if bool(del_keys.any()):
+                found, _ = read_edges(cbl, s, d)
+                net_deletes = int((del_keys & found).sum())
+            else:
+                net_deletes = 0
+        obs.counter("flush.pending_inserts").inc(n_ins)
+        obs.counter("flush.net_deletes").inc(net_deletes)
 
         # proactive grow: worst case every pending insert opens a block
         # (headroom only — this call never acts on rebuild/compact, so it
@@ -315,8 +337,10 @@ class GraphService:
 
         grow_retries = 0
         while True:
-            new_cbl, ustats = batch_update_stats(cbl, src2, dst2, w2, op2)
-            dropped = int(ustats.dropped_edges)
+            with obs.span("flush.upsert", cat="flush",
+                          lanes=int(src2.shape[0]), retry=grow_retries):
+                new_cbl, ustats = batch_update_stats(cbl, src2, dst2, w2, op2)
+                dropped = int(ustats.dropped_edges)
             if dropped == 0:
                 break
             if grow_retries >= MAX_GROW_RETRIES:
@@ -325,11 +349,14 @@ class GraphService:
                     f"{grow_retries} capacity doublings")
             # retry the whole batch on the pre-update cbl: updates are pure,
             # so this is exact (no partial application to reconcile)
-            cbl = maint.apply_action(
-                cbl, MaintenanceAction(
-                    kind="grow", reason=f"overflow: {dropped} dropped",
-                    num_blocks=_num_blocks(cbl) * self._policy.grow_factor),
-                self._policy)
+            with obs.span("flush.grow_retry", cat="flush", dropped=dropped):
+                cbl = maint.apply_action(
+                    cbl, MaintenanceAction(
+                        kind="grow", reason=f"overflow: {dropped} dropped",
+                        num_blocks=(_num_blocks(cbl)
+                                    * self._policy.grow_factor)),
+                    self._policy)
+            obs.counter("flush.grow_retries").inc()
             grow_retries += 1
             self.stats.grows += 1
         cbl = new_cbl
@@ -340,17 +367,18 @@ class GraphService:
                 (sealed_before & ~np.asarray(cbl.sealed)).sum())
 
         # post-apply maintenance (fragmentation repair / cold-vertex seal)
-        action = maint.decide(cbl, pending_inserts=0, policy=self._policy)
-        if action.kind in ("compact", "rebuild", "grow", "seal"):
-            cbl = maint.apply_action(cbl, action, self._policy)
-            if action.kind == "compact":
-                self.stats.compacts += 1
-            elif action.kind == "rebuild":
-                self.stats.rebuilds += 1
-            elif action.kind == "seal":
-                self.stats.seals += 1
-            else:
-                self.stats.grows += 1
+        with obs.span("flush.maintenance", cat="flush"):
+            action = maint.decide(cbl, pending_inserts=0, policy=self._policy)
+            if action.kind in ("compact", "rebuild", "grow", "seal"):
+                cbl = maint.apply_action(cbl, action, self._policy)
+                if action.kind == "compact":
+                    self.stats.compacts += 1
+                elif action.kind == "rebuild":
+                    self.stats.rebuilds += 1
+                elif action.kind == "seal":
+                    self.stats.seals += 1
+                else:
+                    self.stats.grows += 1
 
         self._snap = snap.advance(self._snap, cbl, watermark)
         self.stats.flushes += 1
@@ -358,6 +386,9 @@ class GraphService:
         self.stats.applied_deletes += net_deletes
         self.stats.dropped_retries += grow_retries
         self._deletes_applied += net_deletes
+        obs.counter("flush.count").inc()
+        obs.counter("flush.applied_inserts").inc(int(ustats.applied_inserts))
+        obs.gauge("service.epoch").set(int(self._snap.epoch))
         return FlushReport(epoch=int(self._snap.epoch), watermark=watermark,
                            applied_inserts=int(ustats.applied_inserts),
                            applied_deletes=net_deletes,

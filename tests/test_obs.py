@@ -1,0 +1,240 @@
+"""Unit tests for the repro.obs telemetry layer (registry + tracer)."""
+import json
+
+import pytest
+
+import repro.obs as obs
+from repro.obs.metrics import (Registry, count_bucket, delta,
+                               guarded_percentiles, percentile_min_n)
+from repro.obs.trace import Tracer
+
+
+@pytest.fixture
+def live_obs():
+    """Enable the global facade around a test, restore + clear after."""
+    was = obs.enabled()
+    obs.enable()
+    obs.reset()
+    yield obs
+    obs.enable(was)
+    obs.reset()
+
+
+# ---- metrics ---------------------------------------------------------------
+
+def test_counter_gauge_labeled_series():
+    r = Registry()
+    r.counter("flush.coalesced", shard=0).inc(3)
+    r.counter("flush.coalesced", shard=1).inc()
+    r.counter("flush.coalesced", shard=0).inc(2)
+    r.gauge("tier.sealed_fraction").set(0.4)
+    snap = r.snapshot()
+    assert snap["counters"]["flush.coalesced{shard=0}"] == 5
+    assert snap["counters"]["flush.coalesced{shard=1}"] == 1
+    assert snap["gauges"]["tier.sealed_fraction"] == 0.4
+    # same name, different metric kind -> error
+    with pytest.raises(TypeError):
+        r.gauge("flush.coalesced")
+
+
+def test_histogram_fixed_buckets():
+    r = Registry()
+    h = r.histogram("lat", buckets=(0.001, 0.01, 0.1))
+    for v in (0.0005, 0.005, 0.005, 0.05, 5.0):
+        h.observe(v)
+    s = h.snapshot()
+    assert s["count"] == 5
+    assert s["min"] == 0.0005 and s["max"] == 5.0
+    assert s["buckets"] == {"le_0.001": 1, "le_0.01": 2, "le_0.1": 1,
+                            "le_inf": 1}
+
+
+def test_series_percentile_guards():
+    r = Registry()
+    s = r.series("serve.latency_s", tenant="t")
+    s.observe(1.0)
+    summ = s.summary()
+    assert summ["n"] == 1 and "p50" not in summ and "p99" not in summ
+    for i in range(49):
+        s.observe(float(i))
+    summ = s.summary()
+    assert summ["n"] == 50 and "p50" in summ and "p99" not in summ
+    for i in range(100):
+        s.observe(float(i))
+    summ = s.summary()
+    assert summ["n"] == 150 and "p50" in summ and "p99" in summ
+    assert summ["p99"] >= summ["p50"]
+
+
+def test_guarded_percentiles_and_min_n():
+    assert percentile_min_n(50) == 2
+    assert percentile_min_n(99) == 100
+    out = guarded_percentiles(range(200), pcts=(50, 99))
+    assert out["n"] == 200
+    assert out["p50"] == 99   # nearest-rank on 0..199
+    assert out["p99"] == 197
+    assert guarded_percentiles([1.0], pcts=(50,)) == {"n": 1}
+
+
+def test_snapshot_delta():
+    r = Registry()
+    r.counter("c").inc(5)
+    r.histogram("h", buckets=(1.0,)).observe(0.5)
+    prev = r.snapshot()
+    r.counter("c").inc(2)
+    r.histogram("h", buckets=(1.0,)).observe(2.0)
+    d = delta(r.snapshot(), prev)
+    assert d["counters"]["c"] == 2
+    assert d["histograms"]["h"]["count"] == 1
+    assert d["histograms"]["h"]["buckets"] == {"le_1": 0, "le_inf": 1}
+
+
+def test_count_bucket_edges():
+    assert count_bucket(1) == "1"
+    assert count_bucket(7) == "2-7"
+    assert count_bucket(8) == "8-63"
+    assert count_bucket(511) == "64-511"
+    assert count_bucket(10_000) == "512+"
+
+
+def test_registry_reset_and_collect():
+    r = Registry()
+    r.counter("c", k="a").inc()
+    r.counter("c", k="b").inc(2)
+    pairs = r.collect("c")
+    assert [(lbl["k"], m.value) for lbl, m in pairs] == [("a", 1), ("b", 2)]
+    r.decision("choose_plan", strategy="all_soft")
+    assert r.decisions[0]["kind"] == "choose_plan"
+    r.reset()
+    assert r.snapshot() == {"counters": {}, "gauges": {}, "histograms": {},
+                            "series": {}}
+    assert not r.decisions
+
+
+# ---- tracer ----------------------------------------------------------------
+
+def _manual_tracer():
+    t = {"now": 0.0}
+
+    def clock():
+        return t["now"]
+    return Tracer(clock=clock), t
+
+
+def test_span_timing_and_nesting():
+    tr, t = _manual_tracer()
+    with tr.span("outer", cat="flush", shard=1) as sp:
+        t["now"] += 0.5
+        with tr.span("inner"):
+            t["now"] += 0.25
+    assert sp.get("dur") == 0.75
+    inner, outer = tr.events          # completion order: inner first
+    assert inner["name"] == "inner" and inner["dur"] == 0.25
+    assert inner["depth"] == 1
+    assert outer["name"] == "outer" and outer["dur"] == 0.75
+    assert outer["args"] == {"shard": 1}
+
+
+def test_traced_decorator_and_instant():
+    tr, t = _manual_tracer()
+
+    @tr.traced("work")
+    def work():
+        t["now"] += 1.0
+        return 7
+
+    assert work() == 7
+    tr.instant("mark", reason="x")
+    agg = tr.aggregate()
+    assert agg["work"]["count"] == 1 and agg["work"]["total_s"] == 1.0
+    assert [e["ph"] for e in tr.events] == ["X", "i"]
+
+
+def test_chrome_export_format(tmp_path):
+    tr, t = _manual_tracer()
+    t["now"] = 10.0
+    with tr.span("a"):
+        t["now"] += 0.001
+    path = tr.dump(str(tmp_path / "trace.json"))
+    doc = json.loads(open(path).read())
+    assert "traceEvents" in doc
+    evs = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    assert len(evs) == 1
+    ev = evs[0]
+    # timestamps are relative microseconds from the first span
+    assert ev["ts"] == 0.0 and abs(ev["dur"] - 1000.0) < 1e-6
+    assert {"name", "cat", "ph", "ts", "dur", "pid", "tid"} <= set(ev)
+
+
+def test_wait_records_device_span():
+    import jax.numpy as jnp
+    tr, _ = _manual_tracer()
+    tr.clock = __import__("time").perf_counter
+    x = jnp.arange(8).sum()
+    out = tr.wait(x, "sum.device")
+    assert out is x
+    assert tr.events[-1]["name"] == "sum.device"
+    assert tr.events[-1]["cat"] == "device"
+
+
+def test_capacity_bound_drops():
+    tr, t = _manual_tracer()
+    tr.capacity = 2
+    for _ in range(5):
+        with tr.span("s"):
+            t["now"] += 0.1
+    assert len(tr.events) == 2 and tr.dropped == 3
+    assert tr.to_chrome()["otherData"]["dropped_events"] == 3
+
+
+# ---- the facade gate -------------------------------------------------------
+
+def test_disabled_facade_is_nullops():
+    was = obs.enabled()
+    obs.disable()
+    try:
+        obs.reset()
+        obs.counter("x").inc(5)
+        obs.gauge("g").set(1.0)
+        obs.series("s").observe(2.0)
+        with obs.span("nope") as sp:
+            pass
+        assert sp.get("dur", 0.0) == 0.0
+        obs.decision("nope", a=1)
+        rep = obs.report()
+        assert rep["enabled"] is False
+        assert rep["metrics"]["counters"] == {}
+        assert rep["spans"] == {} and rep["decisions"] == []
+    finally:
+        obs.enable(was)
+        obs.reset()
+
+
+def test_enabled_facade_records(live_obs):
+    obs.counter("x", shard=2).inc()
+    with obs.span("phase", cat="flush"):
+        pass
+    obs.decision("choose_plan", strategy="all_soft", rule="test")
+    rep = obs.report()
+    assert rep["metrics"]["counters"]["x{shard=2}"] == 1
+    assert "phase" in rep["spans"]
+    assert rep["decisions"][0]["strategy"] == "all_soft"
+
+
+def test_wait_disabled_does_not_block():
+    was = obs.enabled()
+    obs.disable()
+    try:
+        sentinel = object()
+        assert obs.wait(sentinel) is sentinel   # not block-until-ready'able
+    finally:
+        obs.enable(was)
+
+
+def test_dump_trace_roundtrip(live_obs, tmp_path):
+    with obs.span("root"):
+        obs.instant("inside")
+    p = obs.dump_trace(str(tmp_path / "t.json"))
+    doc = json.loads(open(p).read())
+    names = [e["name"] for e in doc["traceEvents"]]
+    assert "root" in names and "inside" in names

@@ -260,3 +260,84 @@ def test_service_tiered_sharded(n_shards):
                                atol=1e-5)
     assert np.array_equal(np.asarray(svc.analytics("bfs", source=0)),
                           np.asarray(ref.analytics("bfs", source=0)))
+
+
+# ---------------------------------------------------------------------------
+# maintenance decision accounting + seal/unseal churn (obs layer)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def live_obs():
+    import repro.obs as obs
+    was = obs.enabled()
+    obs.enable()
+    obs.reset()
+    yield obs
+    obs.enable(was)
+    obs.reset()
+
+
+def test_decide_emits_one_full_decision_per_flush(live_obs):
+    """Each service flush cycle books exactly one full-phase maintenance
+    decision counter (the proactive headroom check is labeled separately)."""
+    obs = live_obs
+    svc = GraphService.from_coo(SRC, DST, None, num_vertices=NV,
+                                num_blocks=96, block_width=4,
+                                log_capacity=256, seal_after_epochs=2)
+    us = jnp.asarray(RNG.integers(0, 4, 12).astype(np.int32))
+    ud = jnp.asarray(RNG.integers(0, NV, 12).astype(np.int32))
+    n_flushes = 3
+    for _ in range(n_flushes):
+        svc.apply(us, ud)
+        svc.flush()
+    snap = obs.registry().snapshot()["counters"]
+    full = sum(v for k, v in snap.items()
+               if k.startswith("maint.decision") and "phase=full" in k)
+    assert full == n_flushes
+    # every decision (any phase) carries an explicit kind label
+    assert all("kind=" in k for k in snap if k.startswith("maint.decision"))
+    # seal decisions surface in the structured decision log with a reason
+    sealed = [d for d in obs.registry().decisions
+              if d["kind"] == "maint.decide" and d.get("action") == "seal"]
+    if svc.stats.seals:
+        assert sealed and all("reason" in d for d in sealed)
+
+
+def test_seal_write_unseal_churn_counters(live_obs):
+    """A seal -> write -> unseal round trip increments the churn counters
+    with the right reason labels and vertex-count buckets."""
+    obs = live_obs
+    tg = seal(tier_from_cbl(_cbl()), HALF)
+    n_sealed = int(np.asarray(HALF).sum())
+    snap = obs.registry().snapshot()["counters"]
+    seal_keys = [k for k in snap if k.startswith("seal.seal_count")]
+    assert len(seal_keys) == 1 and "reason=policy" in seal_keys[0]
+    from repro.obs import count_bucket
+    assert f"bucket={count_bucket(n_sealed)}" in seal_keys[0]
+    assert snap[seal_keys[0]] == n_sealed
+
+    # a write into one sealed vertex unseals exactly that vertex
+    sealed_v = int(np.flatnonzero(np.asarray(tg.sealed))[0])
+    tg2, _ = tiered_batch_update_stats(
+        tg, jnp.array([sealed_v], jnp.int32),
+        jnp.array([(sealed_v + 1) % NV], jnp.int32))
+    assert not bool(tg2.sealed[sealed_v])
+    snap = obs.registry().snapshot()["counters"]
+    write_keys = [k for k in snap
+                  if k.startswith("seal.unseal_count") and "reason=write" in k]
+    assert len(write_keys) == 1 and "bucket=1" in write_keys[0]
+    assert snap[write_keys[0]] == 1
+
+    # manual unseal of the rest books under its own reason
+    unseal(tg2, jnp.ones(NV, bool))
+    snap = obs.registry().snapshot()["counters"]
+    manual = [k for k in snap
+              if k.startswith("seal.unseal_count") and "reason=manual" in k]
+    assert len(manual) == 1
+    assert snap[manual[0]] == n_sealed - 1
+    # round trip: total unseals == total seals
+    total_unseal = sum(v for k, v in snap.items()
+                       if k.startswith("seal.unseal_count"))
+    total_seal = sum(v for k, v in snap.items()
+                     if k.startswith("seal.seal_count"))
+    assert total_unseal == total_seal == n_sealed
