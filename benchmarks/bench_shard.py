@@ -13,13 +13,23 @@ alongside contiguity) so the JSON can correlate plan choices with shard
 scaling.  Runs on any device count: shards beyond the mesh axis stack
 locally, so CPU CI (1 device, or 8 forced host devices in the multi-device
 job) exercises the identical code path as a real pod slice.
+
+Sharded rows additionally report the owner-compacted routing telemetry
+(per-shard routed-lane skew, spill-round count — collected in a separate
+obs-enabled pass so the timed loop stays uninstrumented) and assert the
+sharded flush equals the ``n_shards=1`` oracle on the same batch, so the
+fast path can't silently drop records.  ``REPRO_SHARD_WRITE_GUARD``
+(default 0.6, "0" disables) fails the bench when 2-shard update+flush
+throughput drops below that fraction of single-shard.
 """
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as obs
 from benchmarks.common import SCALE, dataset, emit, time_fn
 from repro.core import build_from_coo
 from repro.core.cblist import blocks_needed
@@ -32,8 +42,40 @@ from repro.stream import GraphService
 
 SHARD_COUNTS = (1, 2, 8)
 BATCH = max(64, int(256 * SCALE))
-N_BATCHES = 4
+N_WARM = 3        # uncounted flushes: route/fused-upsert/decide jit warmup
+N_BATCHES = 8     # timed flushes; the row reports the *median* per flush
+                  # (robust to the rare one-time maintenance-action compile)
 BW = 32
+
+
+def _routing_check(mk_service, s_count, batches):
+    """Obs-enabled correctness + telemetry pass (outside the timed loop):
+    the sharded flush must match the 1-shard oracle on the same batches,
+    and the routing counters yield skew / spill-round numbers."""
+    was_on = obs.enabled()
+    obs.enable()
+    obs.reset()
+    svc, oracle = mk_service(s_count), mk_service(1)
+    for us, ud, uw, op in batches:
+        for s in (svc, oracle):
+            s.apply(us, ud, uw, op)
+            s.flush()
+    qs = np.concatenate([b[0] for b in batches])
+    qd = np.concatenate([b[1] for b in batches])
+    f1, w1 = oracle.query_edges(qs, qd)
+    f2, w2 = svc.query_edges(qs, qd)
+    assert np.array_equal(np.asarray(f1), np.asarray(f2)), \
+        f"sharded flush diverged from 1-shard oracle at n_shards={s_count}"
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=1e-6)
+    snap = obs.registry().snapshot()["counters"]
+    routed = [snap.get(f"flush.routed_lanes{{shard={k}}}", 0.0)
+              for k in range(s_count)]
+    mean = max(sum(routed) / max(len(routed), 1), 1e-9)
+    skew = max(routed) / mean if sum(routed) else 1.0
+    spill = int(snap.get("flush.spill_rounds", 0.0))
+    obs.reset()
+    obs.enable(was_on)
+    return round(skew, 3), spill
 
 
 def run():
@@ -46,7 +88,7 @@ def run():
                          block_width=BW)
     x = jnp.ones((cbl.capacity_vertices,), jnp.float32)
     batches = list(update_stream(nv, (np.asarray(src), np.asarray(dst)),
-                                 BATCH, N_BATCHES + 1, seed=9))
+                                 BATCH, N_WARM + N_BATCHES, seed=9))
     out = {"n_devices": len(jax.devices()), "shards": {}}
 
     for s_count in SHARD_COUNTS:
@@ -57,35 +99,62 @@ def run():
         t_sweep = time_fn(lambda g=graph: process_edge_push(g, x))
         t_pr = time_fn(lambda g=graph: pagerank(g, max_iters=5), iters=3)
 
-        svc = GraphService.from_coo(
-            np.asarray(src), np.asarray(dst), np.asarray(w), num_vertices=nv,
-            num_blocks=nb, block_width=BW,
-            log_capacity=max(1024, BATCH * 4), n_shards=s_count)
-        us0, ud0, uw0, op0 = batches[0]
-        svc.apply(us0, ud0, uw0, op0)
-        svc.flush()                               # jit warmup epoch
-        t0 = time.perf_counter()
-        for us, ud, uw, op in batches[1:]:
+        def mk_service(S):
+            return GraphService.from_coo(
+                np.asarray(src), np.asarray(dst), np.asarray(w),
+                num_vertices=nv, num_blocks=nb, block_width=BW,
+                log_capacity=max(1024, BATCH * 4), n_shards=S)
+
+        svc = mk_service(s_count)
+        for us, ud, uw, op in batches[:N_WARM]:   # jit warmup epochs
             svc.apply(us, ud, uw, op)
             svc.flush()
-        jax.block_until_ready(svc.snapshot.cbl)
-        t_upd = (time.perf_counter() - t0) / N_BATCHES
+        flush_times = []
+        for us, ud, uw, op in batches[N_WARM:]:
+            t0 = time.perf_counter()
+            svc.apply(us, ud, uw, op)
+            svc.flush()
+            jax.block_until_ready(jax.tree.leaves(svc.snapshot.cbl))
+            flush_times.append(time.perf_counter() - t0)
+        t_upd = sorted(flush_times)[len(flush_times) // 2]
+
+        skew, spill = (1.0, 0)
+        if s_count > 1:
+            skew, spill = _routing_check(mk_service, s_count, batches[:2])
 
         derived = (f"cut={cut:.3f},contiguity={plan.contiguity:.3f},"
                    f"strategy={plan.strategy}")
         emit(f"shard/sweep_s{s_count}", t_sweep, derived)
         emit(f"shard/pagerank5_s{s_count}", t_pr, derived)
         emit(f"shard/update_flush_s{s_count}", t_upd,
-             f"ups={BATCH / t_upd:.0f},{derived}")
+             f"ups={BATCH / t_upd:.0f},skew={skew},spill_rounds={spill},"
+             f"{derived}")
         out["shards"][str(s_count)] = {
             "sweep_us": round(t_sweep * 1e6, 1),
             "pagerank5_us": round(t_pr * 1e6, 1),
             "updates_per_s": round(BATCH / t_upd, 1),
+            "routed_lane_skew": skew,
+            "spill_rounds": spill,
             "cut_fraction": round(cut, 4),
             "contiguity": round(plan.contiguity, 4),
             "strategy": plan.strategy,
             "impl": plan.impl,
         }
+
+    # scale-adjusted write-scaling guard: 2-shard update+flush throughput
+    # must stay within REPRO_SHARD_WRITE_GUARD (default 0.6x) of 1-shard —
+    # the regression this bench exists to catch ("0" disables)
+    guard = float(os.environ.get("REPRO_SHARD_WRITE_GUARD", "0.6"))
+    ups1 = out["shards"].get("1", {}).get("updates_per_s", 0.0)
+    ups2 = out["shards"].get("2", {}).get("updates_per_s", 0.0)
+    ratio = ups2 / ups1 if ups1 else 1.0
+    out["write_scaling_2s"] = round(ratio, 3)
+    out["write_guard"] = guard
+    if guard > 0 and ups1 and ratio < guard:
+        raise AssertionError(
+            f"sharded write-path regression: 2-shard update throughput "
+            f"{ups2:.1f}/s is {ratio:.2f}x single-shard ({ups1:.1f}/s), "
+            f"below the {guard:.2f}x guard (REPRO_SHARD_WRITE_GUARD)")
     return out
 
 

@@ -70,6 +70,86 @@ class ExecPlan:
     contiguity: float = 1.0  # the P_h statistic the decision used
     run_impl: str = "xla"    # tiered: impl for the sealed-CSR tier sweep
     sealed_fraction: float = 0.0  # tiered: share of edges in the sealed tier
+    route_lane_cap: int = 0  # sharded write path: per-shard routed lane cap
+    route_rounds: int = 1    # sharded write path: expected spill rounds
+
+
+# ---- sharded write-path cost model ----------------------------------------
+
+# Smallest routed lane bucket: tiny batches still compile one fixed shape
+# instead of a fresh shape per batch size.
+MIN_ROUTE_LANES = 8
+# Per-shard lane-capacity ceiling factor over the balanced share
+# ceil(batch/n_shards): skew beyond this spills to further rounds instead of
+# compiling ever-wider upsert shapes (the jit cache stays bounded by the
+# power-of-two ladder between MIN_ROUTE_LANES and slack * batch/n_shards).
+ROUTE_SLACK = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutePlan:
+    """The write-path analogue of :class:`ExecPlan`: how a sharded flush
+    should pack an update batch into per-shard upsert lanes.
+
+    ``lane_cap`` is the fixed per-shard routed lane capacity (power of two,
+    so the fused upsert's jit cache is bounded); ``n_rounds`` the spill
+    rounds needed when the most-loaded shard exceeds it; ``skew`` the
+    max/mean active-records-per-shard ratio the decision saw; and
+    ``stats_period`` a maintenance-cadence hint — how many flushes the
+    full-statistics maintenance decide can be amortized over before the
+    fragmentation scans must look again (spilling or heavily skewed write
+    batches fragment faster, so they pull the cadence back to every flush).
+    """
+    lane_cap: int
+    n_rounds: int
+    records_per_shard: float
+    skew: float
+    stats_period: int
+
+    @property
+    def spilled(self) -> bool:
+        return self.n_rounds > 1
+
+
+def choose_route_plan(n_shards: int, batch_lanes: int,
+                      max_records: Optional[int] = None,
+                      total_records: Optional[int] = None) -> RoutePlan:
+    """Pick the routed lane capacity and spill-round count for one sharded
+    update batch (host arithmetic over concrete counts, like every tuner
+    decision).
+
+    ``batch_lanes`` is the static batch length (bounds the compile-shape
+    ladder); ``max_records`` / ``total_records`` the *active* (non-NOP)
+    record counts — per-shard max and overall — measured by the router.
+    When they are unknown (planning ahead of a batch) the worst case
+    ``max_records = batch_lanes`` is assumed.
+    """
+    n_shards = max(1, int(n_shards))
+    batch_lanes = max(0, int(batch_lanes))
+    balanced = -(-batch_lanes // n_shards) if batch_lanes else 1
+    ceil_cap = _pow2_at_least(max(MIN_ROUTE_LANES, balanced * ROUTE_SLACK))
+    if max_records is None:
+        max_records = batch_lanes
+    max_records = max(0, int(max_records))
+    if total_records is None:
+        total_records = max_records * n_shards
+    lane_cap = min(_pow2_at_least(max(MIN_ROUTE_LANES, max_records)),
+                   ceil_cap)
+    n_rounds = max(1, -(-max_records // lane_cap))
+    mean = max(float(total_records) / n_shards, 1e-9)
+    skew = float(max_records) / mean if total_records else 1.0
+    # maintenance cadence: balanced, spill-free write batches fragment the
+    # store slowly enough to amortize the full-statistics scans over a few
+    # flushes; spill or heavy skew means chains are churning — look now
+    if n_rounds > 1 or skew > ROUTE_SLACK:
+        period = 1
+    elif total_records == 0 or total_records * 4 <= lane_cap * n_shards:
+        period = 4      # light traffic: fragmentation statistics can wait
+    else:
+        period = 2
+    return RoutePlan(lane_cap=int(lane_cap), n_rounds=int(n_rounds),
+                     records_per_shard=float(total_records) / n_shards,
+                     skew=round(skew, 4), stats_period=period)
 
 
 def choose_lookahead(probe: SystemProbe, block_bytes: int) -> int:
@@ -166,9 +246,22 @@ def choose_plan(cbl, task, probe: Optional[SystemProbe] = None,
     impl = ("pallas" if on_tpu and strategy != "all_hard"
             and partition == "gtchain" and lanes >= MIN_PALLAS_LANES
             else "xla")
+    route_lane_cap, route_rounds = 0, 1
+    if task == "batch_update" and n_shards > 1:
+        # write-path cost model: how a capacity-bound batch would pack into
+        # per-shard upsert lanes (the live flush re-decides per batch with
+        # the measured counts — this is the planning-ahead worst case)
+        route = choose_route_plan(n_shards, lanes)
+        route_lane_cap, route_rounds = route.lane_cap, route.n_rounds
+        obs.decision("choose_route_plan", n_shards=n_shards,
+                     batch_lanes=int(lanes), lane_cap=route.lane_cap,
+                     n_rounds=route.n_rounds, skew=route.skew,
+                     stats_period=route.stats_period,
+                     rule="capacity-bound worst case (no batch in flight)")
     plan = ExecPlan(strategy=strategy, partition=partition,
                     lookahead=lookahead, impl=impl, n_shards=n_shards,
-                    cut_fraction=cut, contiguity=contiguity)
+                    cut_fraction=cut, contiguity=contiguity,
+                    route_lane_cap=route_lane_cap, route_rounds=route_rounds)
     logger.info(
         "choose_plan task=%s strategy=%s impl=%s n_shards=%d "
         "contiguity=%.3f cut_fraction=%.3f exposed_us=%.3f",

@@ -262,19 +262,15 @@ def batch_update_stats(cbl, src: jax.Array, dst: jax.Array,
     edges) — grow capacity and re-apply the batch to the *pre-update* CBList
     for loss-free semantics (pure updates make the retry exact).
 
-    A ShardedCBList routes each record to its source's owning shard; under
-    :mod:`repro.obs` the sharded path switches to the per-shard traced
-    variant (identical result, per-shard spans + routing counters).
+    A ShardedCBList routes each record to its source's owning shard via the
+    owner-compacted fused path (one pipeline, obs on or off — per-shard
+    spans are attributed from the fused measurement).
     """
     if not isinstance(cbl, CBList):
         from repro.core.tiered import TieredGraph, tiered_batch_update_stats
         if isinstance(cbl, TieredGraph):
             return tiered_batch_update_stats(cbl, src, dst, w, op)
-        import repro.obs as obs
-        from repro.distributed.graph import (
-            sharded_batch_update_stats, sharded_batch_update_stats_traced)
-        if obs.enabled():
-            return sharded_batch_update_stats_traced(cbl, src, dst, w, op)
+        from repro.distributed.graph import sharded_batch_update_stats
         return sharded_batch_update_stats(cbl, src, dst, w, op)
     return _batch_update_stats(cbl, src, dst, w, op)
 
@@ -359,18 +355,34 @@ def delete_vertices(cbl, vids: jax.Array):
 
 
 @jax.jit
-def _delete_vertices(cbl: CBList, vids: jax.Array) -> CBList:
+def _delete_vertex_chains(cbl: CBList, vids: jax.Array) -> CBList:
+    """The out-edge half of :func:`_delete_vertices`: free the victims'
+    whole chains and clear their vertex-table entries.  A no-op on a shard
+    owning none of ``vids`` — and sufficient on its own when no victim has
+    in-edges anywhere (the sharded delete's fast path)."""
     st = cbl.store
     nvc = cbl.capacity_vertices
     vids_safe = jnp.where(vids == NULL, nvc, vids)
-
-    # --- out-edges: free whole chains -------------------------------------
     is_victim_blk = jnp.isin(st.owner, jnp.where(vids == NULL, NULL - 1, vids))
     blk_ids = jnp.where(is_victim_blk, jnp.arange(st.num_blocks, dtype=jnp.int32),
                         NULL)
     st = bs.free_blocks(st, blk_ids)
+    v_deg = cbl.v_deg.at[vids_safe].set(0, mode="drop")
+    v_level = cbl.v_level.at[vids_safe].set(0, mode="drop")
+    v_head = cbl.v_head.at[vids_safe].set(NULL, mode="drop")
+    v_tail = cbl.v_tail.at[vids_safe].set(NULL, mode="drop")
+    return cbl._replace(store=st, v_deg=v_deg, v_level=v_level,
+                        v_head=v_head, v_tail=v_tail)
 
-    # --- in-edges: masked sweep over all blocks ----------------------------
+
+@jax.jit
+def _sweep_in_edges(cbl: CBList, vids: jax.Array) -> CBList:
+    """The in-edge half of :func:`_delete_vertices`: masked sweep of every
+    block for keys in ``vids``, with per-owner degree correction.  Runs
+    after the chain free, so the victims' own (freed, owner=NULL) blocks
+    never contribute to the degree sums."""
+    st = cbl.store
+    nvc = cbl.capacity_vertices
     vs = jnp.sort(jnp.where(vids == NULL, PAD, vids))
     pos = jnp.searchsorted(vs, st.keys)
     hit = jnp.take(vs, jnp.minimum(pos, vs.shape[0] - 1)) == st.keys
@@ -385,13 +397,12 @@ def _delete_vertices(cbl: CBList, vids: jax.Array) -> CBList:
         removed_per_blk, jnp.where(st.owner == NULL, nvc, st.owner),
         num_segments=nvc)
     st = st._replace(keys=keys, vals=vals, count=st.count - removed_per_blk)
+    return cbl._replace(store=st, v_deg=cbl.v_deg - removed_per_v)
 
-    v_deg = (cbl.v_deg - removed_per_v).at[vids_safe].set(0, mode="drop")
-    v_level = cbl.v_level.at[vids_safe].set(0, mode="drop")
-    v_head = cbl.v_head.at[vids_safe].set(NULL, mode="drop")
-    v_tail = cbl.v_tail.at[vids_safe].set(NULL, mode="drop")
-    return cbl._replace(store=st, v_deg=v_deg, v_level=v_level,
-                        v_head=v_head, v_tail=v_tail)
+
+@jax.jit
+def _delete_vertices(cbl: CBList, vids: jax.Array) -> CBList:
+    return _sweep_in_edges(_delete_vertex_chains(cbl, vids), vids)
 
 
 def add_vertices(cbl, k: int | jax.Array):

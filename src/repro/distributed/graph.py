@@ -55,14 +55,15 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core import blockstore as bs
-from repro.core.blockstore import NULL
+from repro.core.blockstore import NULL, PAD
 from repro.core.cblist import CBList, build_from_coo, compact_cbl, to_coo
 from repro.core.cblist import grow as grow_cbl
 from repro.core.cblist import rebuild as rebuild_cbl
 from repro.core.engine import _DEFAULT_EDGE_F, SEMIRINGS
 from repro.core.traversal import PlacementPlan, lane_mask, make_placement_plan
 from repro.core.updates import (NOP, UpdateStats, _batch_update_stats,
-                                _delete_vertices, _read_edges, _upsert_edges)
+                                _delete_vertex_chains, _delete_vertices,
+                                _read_edges, _sweep_in_edges, _upsert_edges)
 
 # cross-shard combine for sum sweeps: "auto" uses psum_scatter+all_gather
 # (each shard segment-sums its owned slice of the remote messages) when the
@@ -430,30 +431,211 @@ def sharded_in_degrees(scbl: ShardedCBList) -> jax.Array:
 # Sharded update / read paths (routing by owning shard)
 # ---------------------------------------------------------------------------
 
+@functools.partial(jax.jit, static_argnames=("n_shards",))
+def _owner_counts(v_shard: jax.Array, src: jax.Array, op: jax.Array,
+                  n_shards: int) -> Tuple[jax.Array, jax.Array]:
+    """(owner[L], active-records-per-shard[S]) in one device pass — the
+    routing statistic the lane-capacity decision needs."""
+    nvc = v_shard.shape[0]
+    owner = v_shard[jnp.clip(src, 0, nvc - 1)]
+    active = op != NOP
+    counts = jax.ops.segment_sum(
+        active.astype(jnp.int32), jnp.where(active, owner, n_shards),
+        num_segments=n_shards + 1)[:n_shards]
+    return owner, counts
+
+
 @jax.jit
+def _dedupe_delete_ops(src: jax.Array, dst: jax.Array,
+                       op: jax.Array) -> jax.Array:
+    """Turn duplicate DELETE records of one (src, dst) into NOPs.
+
+    The single-batch oracle dedupes deletes inside ``_apply_deletes``
+    (only the first occurrence removes an edge); once a routed batch spills
+    across rounds, duplicates could land in *different* rounds and each
+    remove one parallel edge — so the spill path dedupes globally first.
+    """
+    from repro.core.updates import DELETE, _dedupe_first
+    is_del = op == DELETE
+    keep = _dedupe_first(src, dst, is_del)
+    return jnp.where(is_del & ~keep, NOP, op)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_shards", "lane_cap", "n_rounds"))
+def _route_compact(owner: jax.Array, src: jax.Array, dst: jax.Array,
+                   w: jax.Array, op: jax.Array, *, n_shards: int,
+                   lane_cap: int, n_rounds: int):
+    """Owner-compacted routing: pack each shard's records into its own
+    fixed ``lane_cap`` lanes via one stable sort + segment offsets.
+
+    Output shape ``[n_rounds, n_shards, lane_cap]`` per field (NOP-padded):
+    round r, shard k holds that shard's records ranked
+    ``[r*lane_cap, (r+1)*lane_cap)`` in original batch order, except that
+    DELETEs sort ahead of INSERTs within a shard — so a round split
+    preserves the oracle's all-deletes-then-all-inserts phase semantics.
+    Records beyond ``n_rounds * lane_cap`` per shard are dropped (the
+    caller sizes ``n_rounds`` from the measured per-shard max, so this
+    never fires in practice).
+    """
+    from repro.core.updates import DELETE
+    L = src.shape[0]
+    active = op != NOP
+    phase = jnp.where(op == DELETE, 0, 1)
+    key = jnp.where(active, owner * 2 + phase, 2 * n_shards)
+    order = jnp.argsort(key, stable=True)
+    owner_s = jnp.where(active[order], owner[order], n_shards)
+    starts = jnp.searchsorted(owner_s, jnp.arange(n_shards, dtype=jnp.int32))
+    idx = jnp.arange(L, dtype=jnp.int32)
+    rank = idx - starts[jnp.minimum(owner_s, n_shards - 1)]
+    rnd, lane = rank // lane_cap, rank % lane_cap
+    ok = (owner_s < n_shards) & (rnd < n_rounds)
+    cap = n_rounds * n_shards * lane_cap
+    flat = jnp.where(ok, (rnd * n_shards + owner_s) * lane_cap + lane, cap)
+    shape = (n_rounds, n_shards, lane_cap)
+    r_src = jnp.zeros((cap,), jnp.int32).at[flat].set(
+        src[order], mode="drop").reshape(shape)
+    r_dst = jnp.zeros((cap,), jnp.int32).at[flat].set(
+        dst[order], mode="drop").reshape(shape)
+    r_w = jnp.zeros((cap,), jnp.float32).at[flat].set(
+        w[order], mode="drop").reshape(shape)
+    r_op = jnp.full((cap,), NOP, jnp.int32).at[flat].set(
+        op[order], mode="drop").reshape(shape)
+    return r_src, r_dst, r_w, r_op
+
+
+_fused_batch_update = jax.jit(jax.vmap(_batch_update_stats))
+
+# lane-cap hysteresis per (n_shards, batch_len): per-flush active counts
+# jitter across power-of-two boundaries, and every new bucket is a fresh
+# jit compile of the fused upsert — so reuse the previous (larger) bucket
+# while the measured need stays within 4x of it, and only rebucket on real
+# growth or a sustained 4x shrink
+_ROUTE_CAP_STICKY: dict = {}
+
+
+def _sticky_lane_cap(n_shards: int, batch_len: int, lane_cap: int) -> int:
+    key = (n_shards, batch_len)
+    prev = _ROUTE_CAP_STICKY.get(key)
+    if prev is not None and prev > lane_cap and prev <= 4 * lane_cap:
+        lane_cap = prev
+    _ROUTE_CAP_STICKY[key] = lane_cap
+    return lane_cap
+
+
+def _attribute_shard_upserts(sp, counts: np.ndarray, lanes_per_shard: int,
+                             n_rounds: int) -> None:
+    """Split one fused upsert measurement into per-shard spans/series.
+
+    The fused vmap dispatch is one opaque call; instead of forcing shards
+    sequential (the old traced path — S blocking dispatches per flush),
+    the measured wall time is *attributed* proportionally to each shard's
+    routed-lane count, so ``flush.upsert.shard{shard=k}`` spans and
+    ``flush.upsert_s{shard=k}`` series keep working at vmap speed.
+    """
+    import repro.obs as obs
+    total_dur = float(sp.get("dur", 0.0))
+    t = float(sp.get("ts", 0.0))
+    tot = int(counts.sum())
+    for k in range(len(counts)):
+        lanes = int(counts[k])
+        frac = lanes / tot if tot else 1.0 / len(counts)
+        dur = total_dur * frac
+        obs.attribute("flush.upsert.shard", t, dur, cat="shard", shard=k,
+                      lanes=lanes, attributed=True)
+        obs.counter("flush.routed_lanes", shard=k).inc(lanes)
+        obs.counter("flush.upsert_lanes", shard=k).inc(lanes_per_shard)
+        obs.series("flush.upsert_s", shard=k).observe(dur)
+        t += dur
+
+
 def sharded_batch_update_stats(scbl: ShardedCBList, src: jax.Array,
                                dst: jax.Array, w: Optional[jax.Array] = None,
                                op: Optional[jax.Array] = None
                                ) -> Tuple[ShardedCBList, UpdateStats]:
-    """Route each update record to its source's owning shard and apply all
-    shards' batches in parallel (vmap — updates never cross the cut because
-    an edge lives with its source)."""
+    """Owner-compacted parallel BatchUpdate: route, pack, fused upsert.
+
+    The old path replicated the full batch to every shard behind a per-shard
+    op mask — S × O(batch) work, the measured write-path collapse (ROADMAP:
+    545 -> ~49 updates/s at 2 shards).  Now:
+
+      1. one jitted pass computes owners + per-shard active counts;
+      2. :func:`repro.core.tuner.choose_route_plan` picks the per-shard lane
+         capacity (power-of-two bucketed, ceiling-clamped so jit caches stay
+         bounded) and the spill-round count from the measured skew;
+      3. one stable sort + segment offsets packs each shard's records into
+         its own lanes (:func:`_route_compact`) — per-shard upsert work is
+         O(records/shard), not O(records);
+      4. the per-shard ``_batch_update_stats`` applies under one fused vmap
+         dispatch per round; skew beyond the lane ceiling spills into
+         further rounds instead of wider compiles.
+
+    Updates never cross the cut (an edge lives with its source), so the
+    routed result is bit-identical to the single-shard oracle; DELETE
+    records sort ahead of INSERTs per shard (and duplicate deletes are
+    pre-deduped on the spill path) so round splits preserve the oracle's
+    delete-phase-then-insert-phase semantics.
+
+    Under :mod:`repro.obs` the same fused path emits ``flush.route`` /
+    ``flush.upsert.fused`` spans, per-shard ``flush.upsert.shard`` spans
+    attributed from the fused measurement by routed-lane weight,
+    ``flush.routed_lanes`` / ``flush.upsert_lanes`` counters, and
+    ``flush.spill_rounds`` / ``flush.shard_skew`` telemetry — obs on or off,
+    the arithmetic is identical.
+    """
+    import repro.obs as obs
+    from repro.core.tuner import choose_route_plan
     from repro.core.updates import INSERT
-    if w is None:
-        w = jnp.ones(src.shape, jnp.float32)
-    if op is None:
-        op = jnp.full(src.shape, INSERT, jnp.int32)
-    nvc = scbl.capacity_vertices
-    owner = scbl.v_shard[jnp.clip(src, 0, nvc - 1)]
-    sids = jnp.arange(scbl.n_shards, dtype=jnp.int32)
-    ops = jnp.where(owner[None, :] == sids[:, None], op[None, :], NOP)
-    new_shards, stats = jax.vmap(
-        _batch_update_stats, in_axes=(0, None, None, None, 0))(
-            scbl.shards, src, dst, w, ops)
-    agg = UpdateStats(dropped_edges=stats.dropped_edges.sum(),
-                      applied_inserts=stats.applied_inserts.sum(),
-                      applied_deletes=stats.applied_deletes.sum())
-    return dataclasses.replace(scbl, shards=new_shards), agg
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    w = (jnp.ones(src.shape, jnp.float32) if w is None
+         else jnp.asarray(w, jnp.float32))
+    op = (jnp.full(src.shape, INSERT, jnp.int32) if op is None
+          else jnp.asarray(op, jnp.int32))
+    S = scbl.n_shards
+    L = int(src.shape[0])
+
+    with obs.span("flush.route", cat="shard", lanes=L):
+        owner, counts = _owner_counts(scbl.v_shard, src, op, S)
+        counts_np = np.asarray(counts)
+        max_c = int(counts_np.max())
+        route = choose_route_plan(S, L, max_records=max_c,
+                                  total_records=int(counts_np.sum()))
+        cap = _sticky_lane_cap(S, L, route.lane_cap)
+        if cap != route.lane_cap:
+            route = dataclasses.replace(
+                route, lane_cap=cap, n_rounds=max(1, -(-max_c // cap)))
+        if route.n_rounds > 1:
+            op = _dedupe_delete_ops(src, dst, op)
+        r_src, r_dst, r_w, r_op = _route_compact(
+            owner, src, dst, w, op, n_shards=S,
+            lane_cap=route.lane_cap, n_rounds=route.n_rounds)
+    obs.counter("flush.spill_rounds").inc(route.n_rounds - 1)
+    obs.series("flush.shard_skew").observe(route.skew)
+
+    shards = scbl.shards
+    per_round = []
+    with obs.span("flush.upsert.fused", cat="shard", rounds=route.n_rounds,
+                  lane_cap=route.lane_cap) as sp:
+        for r in range(route.n_rounds):
+            shards, st = _fused_batch_update(shards, r_src[r], r_dst[r],
+                                             r_w[r], r_op[r])
+            per_round.append(st)
+        if obs.enabled():
+            jax.block_until_ready(jax.tree.leaves(shards))
+    if obs.enabled():
+        _attribute_shard_upserts(sp, counts_np,
+                                 route.n_rounds * route.lane_cap,
+                                 route.n_rounds)
+
+    def _sum(field):
+        parts = [getattr(s, field).sum() for s in per_round]
+        return functools.reduce(jnp.add, parts)
+
+    agg = UpdateStats(dropped_edges=_sum("dropped_edges"),
+                      applied_inserts=_sum("applied_inserts"),
+                      applied_deletes=_sum("applied_deletes"))
+    return dataclasses.replace(scbl, shards=shards), agg
 
 
 def sharded_batch_update_stats_traced(scbl: ShardedCBList, src: jax.Array,
@@ -461,49 +643,10 @@ def sharded_batch_update_stats_traced(scbl: ShardedCBList, src: jax.Array,
                                       w: Optional[jax.Array] = None,
                                       op: Optional[jax.Array] = None
                                       ) -> Tuple[ShardedCBList, UpdateStats]:
-    """Observed-mode :func:`sharded_batch_update_stats`: identical routing
-    and result, but shards apply *sequentially* so each shard's upsert gets
-    its own measured span — the diagnosis tool for the sharded write-path
-    collapse (ROADMAP: 545 -> 49 updates/s at 2 shards needs per-shard
-    timing, which the vmapped fast path fuses into one opaque dispatch).
-
-    Per shard: a ``flush.upsert.shard`` span (blocking, so device time is
-    attributed to the shard that spent it), a ``flush.routed_lanes{shard=k}``
-    counter of records routed there, and a ``flush.upsert_s{shard=k}``
-    series for :func:`repro.obs.report`.  Updates never cross the cut, so
-    the sequential per-shard application is bit-identical to the vmap.
-    """
-    import repro.obs as obs
-    from repro.core.updates import INSERT
-    src = jnp.asarray(src, jnp.int32)
-    dst = jnp.asarray(dst, jnp.int32)
-    if w is None:
-        w = jnp.ones(src.shape, jnp.float32)
-    if op is None:
-        op = jnp.full(src.shape, INSERT, jnp.int32)
-    nvc = scbl.capacity_vertices
-    with obs.span("flush.route", cat="shard", lanes=int(src.shape[0])):
-        owner = np.asarray(scbl.v_shard)[np.clip(np.asarray(src), 0, nvc - 1)]
-        op_np = np.asarray(op)
-    shards_out, stats_out = [], []
-    for k in range(scbl.n_shards):
-        lanes = int(((owner == k) & (op_np != NOP)).sum())
-        obs.counter("flush.routed_lanes", shard=k).inc(lanes)
-        ops_k = jnp.where(jnp.asarray(owner == k), op, NOP)
-        with obs.span("flush.upsert.shard", cat="shard", shard=k,
-                      lanes=lanes) as sp:
-            new_shard, st = _batch_update_stats(shard_at(scbl, k),
-                                                src, dst, w, ops_k)
-            jax.block_until_ready(new_shard)
-        obs.series("flush.upsert_s", shard=k).observe(sp.get("dur", 0.0))
-        shards_out.append(new_shard)
-        stats_out.append(st)
-    agg = UpdateStats(
-        dropped_edges=sum(s.dropped_edges for s in stats_out),
-        applied_inserts=sum(s.applied_inserts for s in stats_out),
-        applied_deletes=sum(s.applied_deletes for s in stats_out))
-    return dataclasses.replace(
-        scbl, shards=_restack(shards_out, scbl.mesh)), agg
+    """Back-compat alias: the fused path now carries its own telemetry
+    (per-shard spans are attributed from the fused measurement instead of
+    forcing sequential per-shard execution)."""
+    return sharded_batch_update_stats(scbl, src, dst, w, op)
 
 
 @jax.jit
@@ -515,33 +658,110 @@ def sharded_read_edges(scbl: ShardedCBList, qsrc: jax.Array, qdst: jax.Array
     return found.any(axis=0), jnp.where(found, w, 0.0).sum(axis=0)
 
 
-@jax.jit
+_fused_upsert = jax.jit(jax.vmap(_upsert_edges, in_axes=(0, 0, 0, 0, 0)))
+
+
 def sharded_upsert_edges(scbl: ShardedCBList, src: jax.Array, dst: jax.Array,
                          w: Optional[jax.Array] = None,
                          valid: Optional[jax.Array] = None) -> ShardedCBList:
-    """Insert-or-replace routed by owning shard (delete+insert stay local)."""
-    if w is None:
-        w = jnp.ones(src.shape, jnp.float32)
-    if valid is None:
-        valid = jnp.ones(src.shape, bool)
-    nvc = scbl.capacity_vertices
-    owner = scbl.v_shard[jnp.clip(src, 0, nvc - 1)]
-    sids = jnp.arange(scbl.n_shards, dtype=jnp.int32)
-    valid_k = valid[None, :] & (owner[None, :] == sids[:, None])
-    new_shards = jax.vmap(_upsert_edges, in_axes=(0, None, None, None, 0))(
-        scbl.shards, src, dst, w, valid_k)
+    """Insert-or-replace routed by owning shard (delete+insert stay local).
+
+    Same owner-compacted routing as :func:`sharded_batch_update_stats`, but
+    always single-round: upsert's delete-then-insert per record must not be
+    split across rounds (a round-2 delete would remove a round-1 insert of
+    the same key), so the lane capacity covers the fullest shard outright.
+    """
+    from repro.core.tuner import MIN_ROUTE_LANES, _pow2_at_least
+    from repro.core.updates import INSERT
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    w = (jnp.ones(src.shape, jnp.float32) if w is None
+         else jnp.asarray(w, jnp.float32))
+    valid = (jnp.ones(src.shape, bool) if valid is None
+             else jnp.asarray(valid, bool))
+    S = scbl.n_shards
+    op = jnp.where(valid, INSERT, NOP).astype(jnp.int32)
+    owner, counts = _owner_counts(scbl.v_shard, src, op, S)
+    max_c = int(np.asarray(counts).max())
+    lane_cap = _pow2_at_least(max(MIN_ROUTE_LANES, max_c))
+    r_src, r_dst, r_w, r_op = _route_compact(
+        owner, src, dst, w, op, n_shards=S, lane_cap=lane_cap, n_rounds=1)
+    new_shards = _fused_upsert(scbl.shards, r_src[0], r_dst[0], r_w[0],
+                               r_op[0] != NOP)
     return dataclasses.replace(scbl, shards=new_shards)
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("n_shards",))
+def _victim_in_edge_profile(shards: CBList, v_shard: jax.Array,
+                            vids: jax.Array, n_shards: int
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """(total, remote) live in-edges into the victims across all shards —
+    the read-only degree check that gates the all-shard in-edge sweep.
+    ``remote`` counts in-edges held off the victim's owner shard."""
+    nvc = v_shard.shape[0]
+    vs = jnp.sort(jnp.where(vids == NULL, PAD, vids))
+
+    def per_shard(cbl: CBList, k: jax.Array):
+        st = cbl.store
+        mask = lane_mask(st)
+        pos = jnp.searchsorted(vs, st.keys)
+        hit = jnp.take(vs, jnp.minimum(pos, vs.shape[0] - 1)) == st.keys
+        hit = hit & mask & (st.keys != PAD)
+        vo = v_shard[jnp.clip(st.keys, 0, nvc - 1)]
+        remote = hit & (vo != k)
+        return hit.sum(dtype=jnp.int32), remote.sum(dtype=jnp.int32)
+
+    tot, rem = jax.vmap(per_shard)(
+        shards, jnp.arange(n_shards, dtype=jnp.int32))
+    return tot.sum(), rem.sum()
+
+
+_fused_delete_chains = jax.jit(
+    jax.vmap(_delete_vertex_chains, in_axes=(0, None)))
+_fused_delete_full = jax.jit(jax.vmap(_delete_vertices, in_axes=(0, None)))
+
+
 def sharded_delete_vertices(scbl: ShardedCBList,
                             vids: jax.Array) -> ShardedCBList:
-    """UpdateVertex(delete) on every shard: the out-chain free is a no-op
-    off the owner shard, the in-edge sweep must run everywhere (any shard
-    may hold edges into a deleted vertex)."""
-    new_shards = jax.vmap(_delete_vertices, in_axes=(0, None))(
-        scbl.shards, vids)
-    return dataclasses.replace(scbl, shards=new_shards)
+    """UpdateVertex(delete), with the all-shard in-edge sweep gated on a
+    cheap read-only degree check (:func:`_victim_in_edge_profile`):
+
+      * no victim has in-edges anywhere -> chain free + vertex-table clear
+        only (``delete.insweep{scope=none}``) — the sweep is skipped on
+        every shard;
+      * all in-edges are owner-local and few shards own victims -> sweep
+        only those shards (``scope=owners``);
+      * otherwise -> the full vmapped free + sweep on every shard
+        (``scope=all``), as before.
+
+    Semantics are identical in all three cases: a shard the sweep skips
+    provably holds no edges into any victim.
+    """
+    import repro.obs as obs
+    vids = jnp.asarray(vids, jnp.int32)
+    S = scbl.n_shards
+    tot, rem = (int(x) for x in jax.device_get(
+        _victim_in_edge_profile(scbl.shards, scbl.v_shard, vids, S)))
+    if tot == 0:
+        obs.counter("delete.insweep", scope="none").inc()
+        shards = _fused_delete_chains(scbl.shards, vids)
+        return dataclasses.replace(scbl, shards=shards)
+    if rem == 0:
+        v_np = np.asarray(vids)
+        owner_np = np.asarray(scbl.v_shard)[
+            np.clip(v_np, 0, scbl.capacity_vertices - 1)]
+        owners = np.unique(owner_np[v_np != NULL])
+        if len(owners) <= max(1, S // 2):
+            obs.counter("delete.insweep", scope="owners").inc()
+            stack = _fused_delete_chains(scbl.shards, vids)
+            parts = [jax.tree.map(lambda a: a[k], stack) for k in range(S)]
+            for k in owners:
+                parts[int(k)] = _sweep_in_edges(parts[int(k)], vids)
+            return dataclasses.replace(scbl,
+                                       shards=_restack(parts, scbl.mesh))
+    obs.counter("delete.insweep", scope="all").inc()
+    shards = _fused_delete_full(scbl.shards, vids)
+    return dataclasses.replace(scbl, shards=shards)
 
 
 def sharded_add_vertices(scbl: ShardedCBList, k) -> ShardedCBList:
@@ -580,13 +800,18 @@ def compact_sharded(scbl: ShardedCBList) -> ShardedCBList:
                                shards=jax.vmap(compact_cbl)(scbl.shards))
 
 
+@functools.partial(jax.jit, static_argnames=("max_edges",))
+def _rebuild_stack(shards: CBList, max_edges: int) -> CBList:
+    return jax.vmap(lambda c: rebuild_cbl(c, max_edges=max_edges))(shards)
+
+
 def rebuild_sharded(scbl: ShardedCBList,
                     max_edges: Optional[int] = None) -> ShardedCBList:
-    """Per-shard defragmenting rebuild (range-disjoint sorted chains)."""
-    me = max_edges or scbl.num_blocks * scbl.block_width
-    shards = [rebuild_cbl(shard_at(scbl, k), max_edges=me)
-              for k in range(scbl.n_shards)]
-    return dataclasses.replace(scbl, shards=_restack(shards, scbl.mesh))
+    """Per-shard defragmenting rebuild (range-disjoint sorted chains),
+    vmapped across the shard stack in one jitted call — the shapes are
+    static, so no host loop / per-shard restack round trip."""
+    me = int(max_edges or scbl.num_blocks * scbl.block_width)
+    return dataclasses.replace(scbl, shards=_rebuild_stack(scbl.shards, me))
 
 
 # ---------------------------------------------------------------------------

@@ -44,6 +44,7 @@ from repro.obs.trace import NULL_SPAN, Tracer
 __all__ = [
     "enabled", "enable", "disable", "registry", "tracer", "set_clock",
     "counter", "gauge", "histogram", "series", "span", "wait", "instant",
+    "attribute",
     "decision", "report", "dump_trace", "reset",
     "Registry", "Tracer", "count_bucket", "delta", "guarded_percentiles",
     "percentile_min_n",
@@ -121,6 +122,15 @@ def wait(x, name: str = "device.sync", **args):
     if _enabled:
         return _tracer.wait(x, name, **args)
     return x
+
+
+def attribute(name: str, ts: float, dur: float, cat: str = "host",
+              **args) -> None:
+    """Record a pre-measured span slice (see :meth:`Tracer.attribute`):
+    per-unit attribution of one fused measurement, e.g. splitting a vmapped
+    per-shard upsert's wall time by routed-lane counts."""
+    if _enabled:
+        _tracer.attribute(name, ts, dur, cat=cat, **args)
 
 
 def instant(name: str, cat: str = "host", **args) -> None:

@@ -120,6 +120,24 @@ class Tracer:
             jax.block_until_ready(x)
         return x
 
+    def attribute(self, name: str, ts: float, dur: float, cat: str = "host",
+                  **args) -> None:
+        """Record a pre-measured span (attribution, not measurement).
+
+        The fused-dispatch escape hatch: when one jitted call does the work
+        of N logical units (a vmapped per-shard upsert, say), the caller
+        measures the fused call once and *attributes* slices of it — e.g.
+        proportionally to per-unit lane counts — so per-unit tracks stay in
+        the trace without forcing the units to execute sequentially.
+        ``ts`` is a clock() timestamp, ``dur`` seconds; nesting renders
+        positionally like every other span.
+        """
+        if self._t0 is None:
+            self._t0 = ts
+        self._record({"name": name, "cat": cat, "ph": "X", "ts": ts,
+                      "dur": max(float(dur), 0.0), "depth": self._depth,
+                      "args": args})
+
     def instant(self, name: str, cat: str = "host", **args) -> None:
         """A zero-duration marker (decision points, threshold crossings)."""
         t = self.clock()

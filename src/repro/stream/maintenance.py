@@ -59,6 +59,9 @@ class MaintenancePolicy:
                                              # are cold (None = never seal)
     seal_min_fraction: float = 0.05   # don't repartition for fewer cold
                                       # vertices than this fraction of live
+    stats_period: int = 1             # post-flush full decide every N flushes
+                                      # (others run headroom-only; 1 = every
+                                      # flush, the pre-existing behavior)
 
 
 class MaintenanceAction(NamedTuple):
@@ -213,38 +216,65 @@ def _sharded_statistics(shards):
 
 def _decide_sharded(scbl, pending_inserts: int, policy: MaintenancePolicy,
                     headroom_only: bool = False) -> MaintenanceAction:
-    """Per-shard decisions folded into one action for the whole stack.
+    """One-shot decision for the whole shard stack.
 
-    ``pending_inserts`` is charged to every shard (worst case the entire
-    batch routes to one shard); the grow target is the max over shard
-    targets so the grown stack stays uniform.
+    All per-shard statistics arrive in one jitted call / one device
+    round-trip (:func:`_sharded_statistics`), the threshold rules evaluate
+    vectorized over the stack, and only the winning rule's shards pay any
+    per-shard host arithmetic (the grow-target fold).  Semantics match the
+    per-shard rules exactly: ``pending_inserts`` is charged to every shard
+    (worst case the entire batch routes to one shard), the grow target is
+    the max over shard targets so the grown stack stays uniform, and the
+    reported reason is the first (lowest-id) shard that tripped the
+    winning rule.
     """
+    S = scbl.n_shards
     if headroom_only:
         free = np.asarray(scbl.shards.store.free_top)
-        overlap = np.zeros(scbl.n_shards)
-        contig = np.ones(scbl.n_shards)
+        overlap = np.zeros(S)
+        contig = np.ones(S)
     else:
         free, overlap, contig = (np.asarray(x)
                                  for x in _sharded_statistics(scbl.shards))
+    nb = scbl.num_blocks
     n_live = int(scbl.n_vertices)
-    best = MaintenanceAction(kind="none", reason="all shards in band")
-    for k in range(scbl.n_shards):
-        act = _decide_from_stats(
-            nb=scbl.num_blocks, free=int(free[k]), n_live=n_live,
-            nv_cap=scbl.capacity_vertices, overlap=float(overlap[k]),
-            contiguity=float(contig[k]), pending_inserts=pending_inserts,
-            policy=policy)
-        if act.kind == "none":
-            continue
-        act = act._replace(reason=f"shard {k}: {act.reason}")
-        if _ACTION_PRIORITY[act.kind] > _ACTION_PRIORITY[best.kind]:
-            best = act
-        elif act.kind == best.kind == "grow":
-            best = best._replace(
-                num_blocks=max(best.num_blocks, act.num_blocks),
-                vertex_capacity=max(best.vertex_capacity,
-                                    act.vertex_capacity))
-    return best
+    nv_cap = scbl.capacity_vertices
+    blk_grow = (free - pending_inserts) < policy.headroom_floor * nb
+    v_low = (nv_cap - n_live) < policy.vertex_headroom_floor * nv_cap
+    v_grow = ~blk_grow & v_low        # a block-growing shard never also
+    if blk_grow.any() or v_grow.any():   # reports the vertex rule
+        num_blocks = 0
+        for k in np.nonzero(blk_grow)[0]:
+            target = nb * policy.grow_factor
+            while target - (nb - free[k]) \
+                    < pending_inserts + policy.headroom_floor * target:
+                target *= policy.grow_factor
+            num_blocks = max(num_blocks, int(target))
+        vcap = nv_cap * policy.grow_factor if v_grow.any() else 0
+        k0 = int(np.argmax(blk_grow | v_grow))
+        if blk_grow[k0]:
+            reason = (f"shard {k0}: free blocks {int(free[k0])}/{nb} "
+                      f"(pending {pending_inserts}) below headroom floor "
+                      f"{policy.headroom_floor:.2f}")
+        else:
+            reason = f"shard {k0}: vertex ids {n_live}/{nv_cap} near capacity"
+        return MaintenanceAction(kind="grow", num_blocks=num_blocks,
+                                 vertex_capacity=vcap, reason=reason)
+    rebuild_m = overlap > policy.overlap_ceiling
+    if rebuild_m.any():
+        k0 = int(np.argmax(rebuild_m))
+        return MaintenanceAction(
+            kind="rebuild",
+            reason=f"shard {k0}: chain overlap {float(overlap[k0]):.2f} "
+                   f"above {policy.overlap_ceiling:.2f}")
+    compact_m = contig < policy.contiguity_floor
+    if compact_m.any():
+        k0 = int(np.argmax(compact_m))
+        return MaintenanceAction(
+            kind="compact",
+            reason=f"shard {k0}: contiguity {float(contig[k0]):.2f} "
+                   f"below {policy.contiguity_floor:.2f}")
+    return MaintenanceAction(kind="none", reason="all shards in band")
 
 
 def apply_action(cbl, action: MaintenanceAction,

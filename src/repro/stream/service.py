@@ -366,9 +366,15 @@ class GraphService:
             self.stats.unseals += int(
                 (sealed_before & ~np.asarray(cbl.sealed)).sum())
 
-        # post-apply maintenance (fragmentation repair / cold-vertex seal)
+        # post-apply maintenance (fragmentation repair / cold-vertex seal);
+        # policy.stats_period > 1 amortizes the full fragmentation scans —
+        # off-cycle flushes run the headroom-only decide (capacity checks
+        # never skip a flush, only the repair statistics do)
         with obs.span("flush.maintenance", cat="flush"):
-            action = maint.decide(cbl, pending_inserts=0, policy=self._policy)
+            period = max(1, int(getattr(self._policy, "stats_period", 1)))
+            off_cycle = (self.stats.flushes + 1) % period != 0
+            action = maint.decide(cbl, pending_inserts=0, policy=self._policy,
+                                  headroom_only=off_cycle)
             if action.kind in ("compact", "rebuild", "grow", "seal"):
                 cbl = maint.apply_action(cbl, action, self._policy)
                 if action.kind == "compact":
