@@ -3,21 +3,38 @@
 Replays a mixed multi-tenant trace (point reads, degree reads, updates)
 through :class:`repro.serve.ServeFrontend` on a virtual arrival timeline
 (Poisson at a target QPS, ``ManualClock``) for two dispatch-window /
-bucket-set configurations, reporting wall-clock QPS, virtual p50/p99
-latency, batch occupancy, and the jit-cache-size stat (distinct compiled
-bucket shapes per request kind — the recompile-storm canary).  A final
-row compares batched point-read throughput against an unbatched
-per-request loop at equal request count.
+bucket-set configurations — each preceded by an untimed warm replay so
+first-compile cost stays out of the timed numbers — reporting wall-clock
+QPS, virtual p50/p99 latency, batch occupancy, and the jit-cache-size
+stat (distinct compiled bucket shapes per request kind — the
+recompile-storm canary).  A row compares batched point-read throughput
+against an unbatched per-request loop at equal request count.
+
+The **replica curve** then measures snapshot fan-out: read mega-batches
+dealt round-robin over R = 1/2/4/8 :class:`repro.serve.ReadPlane`
+replicas (clamped to the device count — run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for the full
+curve), against a *sequential* single-replica baseline that blocks with
+a per-field host sync after every batch (the pre-replication read path).
+Every replicated run is asserted bit-identical to the sequential one.
+``REPRO_SERVE_READ_GUARD`` (default 1.5) aborts when 2-replica pipelined
+throughput falls below that multiple of the sequential baseline — the
+regression gate for read scaling.  The guard no-ops with fewer than two
+devices *or* fewer than two schedulable CPU cores: replicas on a
+single-core host time-slice one core, so wall-clock speedup is
+physically capped at ~1x there and the curve only reports it.
 """
+import os
 import time
 
+import jax
 import numpy as np
 
 from benchmarks.common import SCALE, dataset, emit
 from repro.core import DELETE, INSERT
 from repro.core.tuner import ServePlan
-from repro.serve import (DegreeRead, ManualClock, PointRead, ServeFrontend,
-                         UpdateBatch)
+from repro.serve import (DegreeRead, ManualClock, PointRead, ReadPlane,
+                         ServeFrontend, UpdateBatch)
 from repro.stream import GraphService
 
 CONFIGS = (
@@ -75,6 +92,98 @@ def replay(svc, plan, trace):
     return front.report(), wall
 
 
+def replica_curve(nv, src, dst, w, summary):
+    """QPS-vs-replica-count: pipelined fan-out reads vs the sequential
+    single-replica baseline, bit-identity asserted per replica count."""
+    n_dev = jax.device_count()
+    cores = (len(os.sched_getaffinity(0)) if hasattr(os, "sched_getaffinity")
+             else (os.cpu_count() or 1))
+    svc = GraphService.from_coo(src, dst, w, num_vertices=nv,
+                                log_capacity=4096)
+    rng = np.random.default_rng(7)
+    B = max(int(32 * SCALE), 8)                  # mega-batches per kind
+    L = 512                                      # lanes per mega-batch
+    QS = [rng.integers(0, nv, L).astype(np.int32) for _ in range(B)]
+    QD = [rng.integers(0, nv, L).astype(np.int32) for _ in range(B)]
+    VS = [rng.integers(0, nv, L).astype(np.int32) for _ in range(B)]
+    counts = sorted({min(R, n_dev) for R in (1, 2, 4, 8)})
+    planes = {R: ReadPlane(svc.snapshot, R) for R in counts}
+    for R, plane in planes.items():              # compile every replica
+        for i in range(2 * R):
+            jax.block_until_ready(plane.query_edges(QS[i % B], QD[i % B])[1])
+            jax.block_until_ready(plane.query_degrees(VS[i % B])[1])
+
+    def sequential():
+        """Pre-replication read path: block after every mega-batch with a
+        host sync per result field."""
+        plane, out = planes[1], []
+        t0 = time.perf_counter()
+        for i in range(B):
+            _, (f, ww) = plane.query_edges(QS[i], QD[i])
+            _, (deg,) = plane.query_degrees(VS[i])
+            out.append((np.asarray(f), np.asarray(ww), np.asarray(deg)))
+        return time.perf_counter() - t0, out
+
+    def pipelined(R):
+        """Fan out every mega-batch round-robin, collect afterwards (one
+        device_get per batch) — the replicated frontend's read path."""
+        plane, acc = planes[R], []
+        t0 = time.perf_counter()
+        for i in range(B):
+            acc.append((plane.query_edges(QS[i], QD[i])[1],
+                        plane.query_degrees(VS[i])[1]))
+        out = [tuple(jax.device_get((f, ww, deg)))
+               for (f, ww), (deg,) in acc]
+        return time.perf_counter() - t0, out
+
+    reads = 2 * B
+    t_seq, ref = sequential()
+    for rep in range(2):                         # median of 3
+        t, _ = sequential()
+        t_seq = min(t_seq, t)
+    qps_seq = reads / t_seq
+    emit("serve/replica_read_seq", t_seq / reads,
+         f"qps={qps_seq:.0f},lanes_per_s={qps_seq * L:.0f},baseline=blocking")
+    curve = {"sequential": {"read_qps": round(qps_seq, 1), "n_replicas": 1,
+                            "mode": "blocking per-batch sync"}}
+    for R in counts:
+        t_best, got = pipelined(R)
+        for rep in range(2):
+            t, _ = pipelined(R)
+            t_best = min(t_best, t)
+        for batch_got, batch_ref in zip(got, ref):   # replicated == sequential
+            for a, b in zip(batch_got, batch_ref):
+                assert np.array_equal(a, b), \
+                    "replica fan-out results must be bit-identical to the " \
+                    "sequential single-replica read path"
+        qps = reads / t_best
+        speed = qps / qps_seq
+        emit(f"serve/replica_read_r{R}", t_best / reads,
+             f"qps={qps:.0f},vs_seq={speed:.2f}x,replicas={R}")
+        curve[str(R)] = {"read_qps": round(qps, 1), "n_replicas": R,
+                         "speedup_vs_sequential": round(speed, 3)}
+    summary["replica_curve"] = curve
+    summary["replica_devices"] = n_dev
+    summary["replica_host_cores"] = cores
+    summary["replica_batch_lanes"] = L
+    summary["replica_bit_identity"] = "asserted"
+
+    # read-scaling guard (analogue of bench_shard's REPRO_SHARD_WRITE_GUARD):
+    # 2-replica pipelined reads must beat the sequential baseline by the
+    # guard multiple ("0" disables; no-op without 2 devices AND 2 cores)
+    guard = float(os.environ.get("REPRO_SERVE_READ_GUARD", "1.5"))
+    summary["read_guard"] = guard
+    ratio2 = curve.get("2", {}).get("speedup_vs_sequential", 0.0)
+    if n_dev < 2 or cores < 2:
+        summary["read_guard_skipped"] = (
+            f"devices={n_dev}, cores={cores}: no parallel read capacity")
+    elif guard > 0 and ratio2 and ratio2 < guard:
+        raise AssertionError(
+            f"replicated read-path regression: 2-replica pipelined reads "
+            f"are {ratio2:.2f}x the sequential baseline, below the "
+            f"{guard:.2f}x guard (REPRO_SERVE_READ_GUARD)")
+
+
 def run():
     nv, src, dst, w = dataset("rmat_tiny")
     rng = np.random.default_rng(0)
@@ -83,6 +192,11 @@ def run():
     summary = {"n_requests": n_requests, "configs": {}}
 
     for name, plan in CONFIGS:
+        # untimed warm replay: every bucket shape x kind x overlay variant
+        # compiles here, so the timed pass below measures steady state
+        warm_svc = GraphService.from_coo(src, dst, w, num_vertices=nv,
+                                         log_capacity=4096)
+        replay(warm_svc, plan, trace)
         svc = GraphService.from_coo(src, dst, w, num_vertices=nv,
                                     log_capacity=4096)
         rep, wall = replay(svc, plan, trace)
@@ -148,6 +262,8 @@ def run():
         "batched point reads slower than the unbatched per-request loop"
     summary["point_read_speedup_batched_vs_loop"] = t_loop / t_batched
     summary["point_read_requests"] = len(point_reqs)
+
+    replica_curve(nv, src, dst, w, summary)
     return summary
 
 

@@ -297,6 +297,10 @@ def _pow2_at_least(n: int) -> int:
     return p
 
 
+SERVE_BUDGET_HEADROOM = 2.0   # per-(tenant, class) budget = headroom × fair rate
+SERVE_BUDGET_BURST_BUCKETS = 4   # burst allowance in largest-bucket units
+
+
 @dataclasses.dataclass(frozen=True)
 class ServePlan:
     """Knobs for the :mod:`repro.serve` frontend, keyed on arrival rate.
@@ -306,17 +310,33 @@ class ServePlan:
     per request kind); ``windows`` maps latency class -> dispatch window
     seconds; ``flush_pending_max`` is the pending-record count at which the
     scheduler interleaves a flush ahead of read serving.
+
+    ``n_replicas`` sizes the read plane: the pinned snapshot is broadcast
+    to that many devices and read mega-batches fan out round-robin
+    (:mod:`repro.serve.replica`); clamped to the devices actually present.
+    ``double_buffer`` selects the pipelined flush (begin/publish split) —
+    when off, write pressure flushes synchronously as before.
+
+    ``budget_lanes_per_s``/``budget_burst_lanes`` are the default
+    per-``(tenant, latency_class)`` token-bucket admission budget
+    (:mod:`repro.serve.admission`); 0 disables admission control.
     """
     bucket_set: tuple
     windows: dict
     flush_pending_max: int
     arrival_lanes_per_s: float
+    n_replicas: int = 1
+    double_buffer: bool = True
+    budget_lanes_per_s: float = 0.0
+    budget_burst_lanes: int = 0
 
 
 def choose_serve_plan(arrival_qps: float, mean_lanes_per_request: float = 8.0,
                       probe: Optional[SystemProbe] = None,
                       log_capacity: int = 4096,
-                      high_watermark: float = 0.75) -> ServePlan:
+                      high_watermark: float = 0.75,
+                      n_replicas: int = 1,
+                      tenant_budget_qps: Optional[float] = None) -> ServePlan:
     """Size the frontend's bucket ladder and dispatch windows from the
     observed arrival rate (the serving analogue of ``choose_plan``: pick
     the batching strategy from a measured system statistic, not a constant).
@@ -328,6 +348,16 @@ def choose_serve_plan(arrival_qps: float, mean_lanes_per_request: float = 8.0,
     shrinks windows — both directions keep occupancy near the target
     without opening new compile-cache entries (the ladder stays a bounded
     power-of-two set).
+
+    ``n_replicas`` requests that many snapshot read replicas (read capacity
+    scales with devices, so the admission budgets below scale with it too).
+    ``tenant_budget_qps`` opts into per-``(tenant, latency_class)``
+    admission control: each pair may sustain
+    ``SERVE_BUDGET_HEADROOM × tenant_budget_qps × mean_lanes × n_replicas``
+    lanes/s with a burst allowance of ``SERVE_BUDGET_BURST_BUCKETS``
+    largest buckets — sized so a tenant at its declared rate never sheds,
+    while a storm is bounded at the headroom multiple instead of starving
+    every other tenant's p99.  ``None`` leaves admission off.
     """
     lane_rate = max(arrival_qps, 1.0) * max(mean_lanes_per_request, 1.0)
     batch_hi = SERVE_WINDOW_CLAMPS["batch"][1]
@@ -349,21 +379,36 @@ def choose_serve_plan(arrival_qps: float, mean_lanes_per_request: float = 8.0,
     fill = SERVE_TARGET_OCCUPANCY * max_bucket / lane_rate   # bucket fill time
     windows = {cls: float(min(max(fill, lo), hi))
                for cls, (lo, hi) in SERVE_WINDOW_CLAMPS.items()}
+    n_replicas = max(1, int(n_replicas))
+    if tenant_budget_qps is None:
+        budget_rate, budget_burst = 0.0, 0
+    else:
+        budget_rate = (SERVE_BUDGET_HEADROOM * max(tenant_budget_qps, 1.0)
+                       * max(mean_lanes_per_request, 1.0) * n_replicas)
+        budget_burst = SERVE_BUDGET_BURST_BUCKETS * max_bucket
     plan = ServePlan(bucket_set=tuple(ladder), windows=windows,
                      flush_pending_max=max(64, log_capacity // 2),
-                     arrival_lanes_per_s=lane_rate)
+                     arrival_lanes_per_s=lane_rate,
+                     n_replicas=n_replicas,
+                     budget_lanes_per_s=budget_rate,
+                     budget_burst_lanes=budget_burst)
     logger.info(
         "choose_serve_plan qps=%.1f lanes/s=%.1f buckets=%s windows=%s "
-        "flush_pending_max=%d", arrival_qps, lane_rate, plan.bucket_set,
-        {k: round(v, 4) for k, v in windows.items()}, plan.flush_pending_max)
+        "flush_pending_max=%d replicas=%d budget=%.0f lanes/s",
+        arrival_qps, lane_rate, plan.bucket_set,
+        {k: round(v, 4) for k, v in windows.items()}, plan.flush_pending_max,
+        n_replicas, budget_rate)
     obs.decision("choose_serve_plan", arrival_qps=round(arrival_qps, 2),
                  lanes_per_s=round(lane_rate, 2),
                  bucket_set=list(plan.bucket_set),
                  windows={k: round(v, 5) for k, v in windows.items()},
                  flush_pending_max=plan.flush_pending_max,
+                 n_replicas=n_replicas,
+                 budget_lanes_per_s=round(budget_rate, 2),
                  rule=f"fill largest bucket to {SERVE_TARGET_OCCUPANCY:g} "
                       f"occupancy inside class clamps (ladder capped by "
-                      f"watermarked log admission)")
+                      f"watermarked log admission); budgets "
+                      f"{SERVE_BUDGET_HEADROOM:g}x declared rate x replicas")
     return plan
 
 

@@ -212,6 +212,46 @@ def sasrec_shardings(mesh: Mesh, cb) -> Any:
     return (params_sh, sh)
 
 
+# ---------------------------------------------------------------------------
+# graph-serving read replicas
+# ---------------------------------------------------------------------------
+
+def read_replica_devices(n_replicas: int, devices=None) -> list:
+    """Device placement for the serve read plane's snapshot replicas.
+
+    Replica ``r`` serves from ``devices[r % D]`` — requesting more replicas
+    than devices clamps to ``D`` (extra copies of a snapshot on one device
+    buy nothing: reads against the same device serialize anyway).  Replica 0
+    always maps to the *first* device so the primary copy — the arrays the
+    writer already owns — can be served in place without a transfer.
+    """
+    devices = list(jax.devices() if devices is None else devices)
+    n = max(1, min(int(n_replicas), len(devices)))
+    return devices[:n]
+
+
+def replicate_snapshot(snapshot, n_replicas: int, devices=None) -> list:
+    """Broadcast a pinned serving snapshot across the device mesh.
+
+    Returns ``n`` :class:`~repro.stream.snapshot.Snapshot` replicas (``n``
+    clamped to the devices present): replica 0 is the original object —
+    shard-local placement stays put, no copy — and replicas 1.. are
+    asynchronous ``device_put`` copies of the storage arrays onto their
+    devices.  The copies overlap with serving (JAX async dispatch); the
+    first read routed to a replica blocks on its own transfer only.
+
+    Reads fan out over the replicas round-robin
+    (:class:`repro.serve.replica.ReadPlane`); the *write* path is untouched
+    — updates keep flowing through the one sharded writer, and every epoch
+    advance re-broadcasts (a snapshot is immutable, so replicas are never
+    patched, only replaced).
+    """
+    from repro.stream.snapshot import device_replica
+    targets = read_replica_devices(n_replicas, devices)
+    return [snapshot if r == 0 else device_replica(snapshot, dev)
+            for r, dev in enumerate(targets)]
+
+
 def shardings_for_cell(mesh: Mesh, cb) -> Any:
     if cb.family == "lm":
         return lm_shardings(mesh, cb)

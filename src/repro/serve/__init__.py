@@ -16,9 +16,12 @@ flush latency behind versioned reads.
     front.report()                                 # QPS / p50 / p99 / occupancy
 """
 from repro.core.tuner import ServePlan, choose_serve_plan
+from repro.serve.admission import (ADMIT, DEFER, SHED, AdmissionController,
+                                   TokenBucket)
 from repro.serve.batcher import (JitShapeStat, KindQueue, MicroBatch,
                                  bucket_for)
 from repro.serve.overlay import overlay_degrees, overlay_point_reads
+from repro.serve.replica import ReadPlane
 from repro.serve.request import (KINDS, LATENCY_CLASSES, READ_KINDS, Analytics,
                                  DegreeRead, KHopSample, PointRead, Request,
                                  Ticket, UpdateBatch)

@@ -90,10 +90,17 @@ class KindQueue:
         self._pending_lanes = 0
         self._head_partial = False    # head ticket already served some lanes
 
-    def put(self, ticket: Ticket) -> None:
+    def put(self, ticket: Ticket, deadline: Optional[float] = None) -> None:
+        """Queue a ticket; its dispatch deadline defaults to arrival + the
+        class window.  ``deadline`` overrides for tickets entering late —
+        admission-deferred requests re-queue with ``admit_time + window``
+        (their wait was the budget's doing; the batching window still gets
+        its co-batching slack) while latency keeps accruing from the true
+        arrival."""
         window = self.windows[ticket.request.latency_class]
         self._waiting.append((ticket, ticket.request.size))
-        self._deadlines.append(ticket.t_arrival + window)
+        self._deadlines.append(ticket.t_arrival + window
+                               if deadline is None else deadline)
         self._pending_lanes += ticket.request.size
 
     @property

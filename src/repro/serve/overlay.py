@@ -16,6 +16,14 @@ reading the new snapshot:
     the view's coalescing, so ordering within the pending window cannot
     leak through.
 
+The overlay is agnostic to where the pending window came from: during a
+double-buffered flush the service's :meth:`~repro.stream.service.
+GraphService.pending_view` spans *shadow + log* (records drained into the
+in-flight flush plus records admitted since), re-coalesced across the
+concatenation — the combines below are shape-polymorphic, so the 2×-wide
+view costs one extra compile per query bucket and read-your-writes stays
+bit-identical to flush-then-read while the next epoch is still building.
+
 Split in two stages on purpose: the *base* reads go through the snapshot
 layer (which dispatches CBList / ShardedCBList / TieredGraph), and only
 the pure array combine is jitted here — so sharded *and tiered* services

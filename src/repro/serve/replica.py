@@ -1,0 +1,100 @@
+"""ReadPlane: snapshot fan-out reads over R device replicas.
+
+The read half of the co-design at serving scale: snapshots are immutable
+and versioned, so scaling reads is pure data placement — broadcast the
+pinned serving snapshot to R devices (:func:`repro.distributed.sharding.
+replicate_snapshot`) and deal read mega-batches round-robin across the
+copies.  Each dispatch is an independent asynchronous jit call committed
+to its replica's device, so R batches execute concurrently while the host
+keeps fusing the next ones; the scheduler collects results afterwards with
+one ``device_get`` per batch (:meth:`ServeFrontend.step`'s collect pass).
+
+Bit-identity is by construction: every replica holds the same arrays and
+runs the same pure read functions, so which replica served a batch is
+unobservable in the response — only in the latency.  The compile cache
+grows to (bucket ladder × replicas) per read kind, a bounded static set;
+:class:`~repro.serve.batcher.JitShapeStat` keeps counting logical bucket
+shapes, so the recompile-storm canary is unchanged.
+
+Epoch advance: the plane re-broadcasts when the service publishes a new
+snapshot (object identity — a pointer swap on the writer side becomes R
+async ``device_put`` calls here, overlapped with serving).  Readers never
+see a torn version: a broadcast replaces whole replicas, and in-flight
+batches finish against the replica objects they dispatched with.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+import repro.obs as obs
+from repro.distributed.sharding import replicate_snapshot
+from repro.stream import snapshot as snap
+from repro.stream.snapshot import Snapshot
+
+
+class ReadPlane:
+    """R replicas of the pinned snapshot + a round-robin dispatch cursor."""
+
+    def __init__(self, snapshot: Snapshot, n_replicas: int = 1, devices=None):
+        self._want = max(1, int(n_replicas))
+        self._devices = devices
+        self._replicas: list = []
+        self._pinned: Optional[Snapshot] = None
+        self._version: Tuple[int, int] = (0, 0)
+        self._cursor = 0
+        self.broadcast(snapshot)
+
+    @property
+    def n_replicas(self) -> int:
+        """Replicas actually placed (requested count clamped to devices)."""
+        return len(self._replicas)
+
+    @property
+    def pinned(self) -> Snapshot:
+        """The snapshot every replica currently mirrors."""
+        return self._pinned
+
+    @property
+    def version(self) -> Tuple[int, int]:
+        """Concrete ``(epoch, watermark)`` of the pinned snapshot — cached
+        host ints so dispatch stamping costs no device sync."""
+        return self._version
+
+    def broadcast(self, snapshot: Snapshot) -> bool:
+        """Mirror a newly published snapshot (no-op on the same object).
+
+        The copies are asynchronous ``device_put`` dispatches — broadcast
+        returns immediately and the transfers overlap with whatever reads
+        are already in flight on the old replica objects.
+        """
+        if self._pinned is snapshot:
+            return False
+        with obs.span("serve.broadcast", cat="serve",
+                      replicas=self._want):
+            self._replicas = replicate_snapshot(snapshot, self._want,
+                                                self._devices)
+        self._pinned = snapshot
+        self._version = snapshot.version
+        return True
+
+    def _next(self) -> Tuple[int, Snapshot]:
+        r = self._cursor
+        self._cursor = (r + 1) % len(self._replicas)
+        return r, self._replicas[r]
+
+    # ---- fan-out read dispatches (async: callers device_get later) -------
+
+    def query_edges(self, qsrc, qdst):
+        """(replica_index, (found, w)) — dispatched, not synced."""
+        r, s = self._next()
+        return r, snap.query_edges(s, qsrc, qdst)
+
+    def query_degrees(self, verts):
+        r, s = self._next()
+        return r, (snap.query_degrees(s, verts),)
+
+    def sample_khop(self, seeds, key, fanout: Sequence[int]):
+        r, s = self._next()
+        return r, tuple(snap.sample_khop(s, seeds, key, fanout))

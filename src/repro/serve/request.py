@@ -159,7 +159,7 @@ class Ticket:
     """
 
     __slots__ = ("id", "request", "t_arrival", "t_done", "done", "value",
-                 "version")
+                 "version", "shed")
 
     def __init__(self, request: Request, t_arrival: float):
         self.id = next(_ticket_ids)
@@ -169,6 +169,7 @@ class Ticket:
         self.done = False
         self.value = None
         self.version: Optional[Tuple[int, int]] = None
+        self.shed = False     # rejected by admission control (value is None)
 
     def complete(self, value, now: float, version=None) -> None:
         self.value = value
@@ -176,12 +177,21 @@ class Ticket:
         self.version = version
         self.done = True
 
+    def complete_shed(self, now: float) -> None:
+        """Terminal reject by admission control: ``done`` (the caller's
+        wait ends) with ``shed`` set and no value — a fast, explicit
+        rejection the client can retry elsewhere, not a served answer."""
+        self.shed = True
+        self.t_done = now
+        self.done = True
+
     @property
     def latency(self) -> Optional[float]:
         return None if self.t_done is None else self.t_done - self.t_arrival
 
     def __repr__(self):
-        state = "done" if self.done else "pending"
+        state = ("shed" if self.shed
+                 else "done" if self.done else "pending")
         return (f"Ticket(#{self.id} {self.request.kind} "
                 f"tenant={self.request.tenant!r} "
                 f"{self.request.latency_class} {state})")

@@ -15,28 +15,41 @@ is injectable so tests and benches replay traffic on a virtual timeline.
 
 Per step, in order:
 
-  1. due **update** micro-batches are admitted into the service log
+  1. admission-**deferred** requests are re-offered as their token budgets
+     refill (:mod:`repro.serve.admission` — submit() already shed what the
+     budget rejects outright);
+  2. due **update** micro-batches are admitted into the service log
      (padded to a bucket, masked — bounded compile cache like every kind);
-  2. a **flush** is interleaved when the pending count crosses
-     ``ServePlan.flush_pending_max`` (publishing a new snapshot epoch;
-     maintenance piggybacks on the flush);
-  3. due **point/degree read** batches dispatch against the current
-     snapshot — tenants opted into read-your-writes route through the
-     pending-log overlay instead of waiting for a flush.  Any overlay
-     dispatch first force-admits updates still waiting in the frontend
-     queue: the overlay covers admitted records, so a write must never be
-     invisible merely because its dispatch window is longer than the
-     read's;
-  4. due **khop / analytics** dispatch; for read-your-writes tenants these
-     admit queued updates and force a flush first (whole-graph reads
+  3. **flush control**: an in-flight double-buffered flush is published
+     when its device work is done (or write pressure recurs), and a new
+     one *begins* when the pending count crosses
+     ``ServePlan.flush_pending_max`` — begin drains the log and dispatches
+     the next epoch's arrays asynchronously, so the reads below keep
+     serving the pinned snapshot while the upsert runs (the epoch advance
+     readers eventually observe is a pointer swap in :meth:`_version`);
+  4. the read plane re-**broadcasts** if a new snapshot was published
+     (async device_put per replica — :mod:`repro.serve.replica`);
+  5. due **point/degree read** batches *dispatch* round-robin across the
+     R snapshot replicas (async, collected at the end of the step with
+     one ``device_get`` per batch) — tenants opted into read-your-writes
+     route through the pending-log overlay instead, which while a shadow
+     flush is in flight spans shadow+pending (bit-identical to
+     flush-then-read, still).  Any overlay dispatch first force-admits
+     updates waiting in the frontend queue;
+  6. due **khop / analytics** dispatch; for read-your-writes tenants these
+     admit queued updates and force a full flush first (whole-graph reads
      cannot be overlaid per key, so freshness is bought with an epoch
-     advance).
+     advance);
+  7. in-flight read batches are **collected** in dispatch order — one
+     blocking ``device_get`` each, attributed as device time via
+     ``obs.wait`` — and their tickets complete.
 
 Every response is stamped with the ``(epoch, watermark)`` version it was
 served at.
 """
 from __future__ import annotations
 
+import collections
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -47,7 +60,9 @@ import repro.obs as obs
 from repro.core.tuner import ServePlan, choose_serve_plan
 from repro.obs.metrics import Registry
 from repro.serve import overlay as ov
+from repro.serve.admission import ADMIT, DEFER, SHED, AdmissionController
 from repro.serve.batcher import JitShapeStat, KindQueue, MicroBatch
+from repro.serve.replica import ReadPlane
 from repro.serve.request import Request, Ticket
 from repro.stream import snapshot as snap
 from repro.stream.service import GraphService
@@ -68,8 +83,14 @@ class ManualClock:
 
 
 class TenantConfig:
-    def __init__(self, read_your_writes: bool = False):
+    def __init__(self, read_your_writes: bool = False,
+                 budget_lanes_per_s: Optional[float] = None,
+                 budget_burst_lanes: Optional[int] = None):
         self.read_your_writes = bool(read_your_writes)
+        # None -> the plan's default budget applies; <= 0 -> admission off
+        # for this tenant
+        self.budget_lanes_per_s = budget_lanes_per_s
+        self.budget_burst_lanes = budget_burst_lanes
 
 
 class _Partial:
@@ -88,7 +109,8 @@ class ServeFrontend:
 
     def __init__(self, service: GraphService, plan: Optional[ServePlan] = None,
                  *, fanout: Tuple[int, ...] = (15, 10), clock=None,
-                 freshness_flush: bool = True):
+                 freshness_flush: bool = True,
+                 n_replicas: Optional[int] = None):
         self.service = service
         self.plan = plan or choose_serve_plan(
             100.0, log_capacity=service._log.capacity,
@@ -102,6 +124,19 @@ class ServeFrontend:
         self._queues: Dict[Tuple[str, bool], KindQueue] = {}
         self._partials: Dict[int, _Partial] = {}
         self.shapes = JitShapeStat()
+        # snapshot fan-out: R replicas of the pinned snapshot, round-robin
+        # read dispatch (n_replicas kwarg overrides the plan's)
+        self.read_plane = ReadPlane(
+            service.snapshot,
+            self.plan.n_replicas if n_replicas is None else n_replicas)
+        # dispatched-but-uncollected read mega-batches, in dispatch order:
+        # (micro-batch, device arrays, version stamp)
+        self._inflight: List[Tuple[MicroBatch, tuple, Tuple[int, int]]] = []
+        # per-(tenant, class) token buckets; submit() sheds or defers
+        self.admission = AdmissionController(
+            default_rate=self.plan.budget_lanes_per_s,
+            default_burst=self.plan.budget_burst_lanes)
+        self._deferred: collections.deque = collections.deque()
         # serving statistics live on a repro.obs metrics registry: the
         # global one when observability is on (so obs.report() carries the
         # QPS/p50/p99/occupancy series), a private always-on one otherwise
@@ -116,10 +151,20 @@ class ServeFrontend:
 
     # ---- tenancy ----------------------------------------------------------
 
-    def register_tenant(self, name: str,
-                        read_your_writes: bool = False) -> TenantConfig:
-        cfg = TenantConfig(read_your_writes)
+    def register_tenant(self, name: str, read_your_writes: bool = False,
+                        budget_lanes_per_s: Optional[float] = None,
+                        budget_burst_lanes: Optional[int] = None
+                        ) -> TenantConfig:
+        """Register (or reconfigure) a tenant.  ``budget_lanes_per_s``
+        overrides the plan's default admission budget for this tenant
+        (0 or negative disables admission for it; None keeps the plan's)."""
+        cfg = TenantConfig(read_your_writes, budget_lanes_per_s,
+                           budget_burst_lanes)
         self.tenants[name] = cfg
+        if budget_lanes_per_s is not None:
+            burst = (budget_burst_lanes if budget_burst_lanes is not None
+                     else max(int(budget_lanes_per_s), 1))
+            self.admission.set_budget(name, budget_lanes_per_s, burst)
         return cfg
 
     def _overlay_for(self, req: Request) -> bool:
@@ -136,16 +181,73 @@ class ServeFrontend:
         return self._queues[key]
 
     def submit(self, req: Request) -> Ticket:
+        """Offer a request: admission-checked, then queued for batching.
+
+        The returned ticket is always live — check ``ticket.shed`` before
+        ``ticket.value``: a shed ticket completed immediately with no value
+        (the tenant's ``(tenant, latency_class)`` token budget was
+        exhausted and the class is latency-bound).  Batch-class requests
+        over budget are *deferred* instead: parked until tokens refill,
+        then queued with a fresh dispatch window.
+        """
         if req.tenant not in self.tenants:
             self.register_tenant(req.tenant)
-        ticket = Ticket(req, t_arrival=float(self.clock()))
+        now = float(self.clock())
+        ticket = Ticket(req, t_arrival=now)
+        span = self._tenant_span.setdefault(req.tenant, [now, now])
+        span[0] = min(span[0], now)
+        self.metrics.counter("serve.submitted", tenant=req.tenant,
+                             cls=req.latency_class).inc()
+        verdict = self.admission.admit(req.tenant, req.latency_class,
+                                       req.size, now)
+        if verdict == SHED:
+            ticket.complete_shed(now)
+            self.metrics.counter("serve.shed", tenant=req.tenant,
+                                 cls=req.latency_class).inc()
+            self.metrics.counter("serve.shed_lanes", tenant=req.tenant,
+                                 cls=req.latency_class).inc(req.size)
+            obs.instant("serve.shed", cat="serve", tenant=req.tenant,
+                        cls=req.latency_class, lanes=req.size)
+            return ticket
+        if verdict == DEFER:
+            self.admission.on_defer(req.tenant, req.latency_class, req.size)
+            self.metrics.counter("serve.deferred", tenant=req.tenant,
+                                 cls=req.latency_class).inc()
+            self._deferred.append(ticket)
+            return ticket
+        self._enqueue(ticket)
+        return ticket
+
+    def _enqueue(self, ticket: Ticket,
+                 deadline: Optional[float] = None) -> None:
+        req = ticket.request
         use_overlay = (req.kind in ("point_read", "degree_read", "khop")
                        and self._overlay_for(req))
-        self._queue(req.kind, use_overlay).put(ticket)
-        span = self._tenant_span.setdefault(req.tenant,
-                                            [ticket.t_arrival, ticket.t_arrival])
-        span[0] = min(span[0], ticket.t_arrival)
-        return ticket
+        self._queue(req.kind, use_overlay).put(ticket, deadline)
+
+    def _readmit_deferred(self, now: float) -> None:
+        """Re-offer parked batch-class requests as their budgets refill
+        (FIFO per arrival; a re-admitted ticket gets a fresh dispatch
+        window — its latency still accrues from true arrival)."""
+        if not self._deferred:
+            return
+        still: collections.deque = collections.deque()
+        while self._deferred:
+            ticket = self._deferred.popleft()
+            req = ticket.request
+            if self.admission.try_readmit(req.tenant, req.latency_class,
+                                          req.size, now):
+                self.admission.on_undefer(req.tenant, req.latency_class,
+                                          req.size)
+                self._enqueue(ticket,
+                              deadline=now
+                              + self._queue_window(req.latency_class))
+            else:
+                still.append(ticket)
+        self._deferred = still
+
+    def _queue_window(self, latency_class: str) -> float:
+        return self.plan.windows[latency_class]
 
     # ---- the serving loop -------------------------------------------------
 
@@ -154,20 +256,43 @@ class ServeFrontend:
         now = float(self.clock()) if now is None else float(now)
         done0 = self._completed
 
-        # 1. write-side: admit due update batches
+        # 1. re-offer admission-deferred requests (budgets refill with time)
+        self._readmit_deferred(now)
+
+        # 2. write-side: admit due update batches
         self._pump((("update", False),), now)
 
-        # 2. interleaved flush under write pressure
-        if self.service.pending_updates >= self.plan.flush_pending_max:
-            self._flush()
+        # 3. flush control: publish an in-flight double-buffered flush when
+        #    its device work is done (or pressure recurs), then begin a new
+        #    one under write pressure — begin defers the publish, so the
+        #    reads below still serve the pinned epoch and never block on
+        #    the upsert
+        pressure = (self.service.pending_updates
+                    >= self.plan.flush_pending_max)
+        if self.service.flush_in_flight and (pressure
+                                             or self.service.flush_ready()):
+            self._finish_flush()
+        if pressure:
+            if self.plan.double_buffer:
+                self._begin_flush()
+            else:
+                self._flush()
 
-        # 3. point/degree serving (overlay variants read the pending log)
+        # 4. mirror a newly published snapshot across the read replicas
+        self.read_plane.broadcast(self.service.snapshot)
+
+        # 5. point/degree serving (overlay variants read the pending log;
+        #    plain variants fan out over the replicas, collected in 7.)
         self._pump((("point_read", False), ("degree_read", False),
                     ("point_read", True), ("degree_read", True)), now)
 
-        # 4. whole-graph reads (khop + analytics)
+        # 6. whole-graph reads (khop + analytics)
         self._pump((("khop", False), ("khop", True),
                     ("analytics", False), ("analytics", True)), now)
+
+        # 7. collect every read dispatched this step (one device_get per
+        #    mega-batch) and complete the tickets
+        self._collect(now)
         return self._completed - done0
 
     def drain(self, flush: bool = False) -> int:
@@ -176,12 +301,26 @@ class ServeFrontend:
         Steps at the *earliest* pending deadline each round so recorded
         latencies keep their deadline order (stepping at the latest would
         complete an interactive read with a batch-window timestamp).
+        Admission-deferred requests contribute their token-refill ETA as a
+        deadline, so a drain meters virtual time through budget waits too.
         """
         done0 = self._completed
-        while any(len(q) for q in self._queues.values()):
+        now = float(self.clock())
+        while any(len(q) for q in self._queues.values()) or self._deferred \
+                or self._inflight:
+            # virtual time is monotone across rounds: budget refills meter
+            # against the last *stepped* time, not the (possibly frozen)
+            # wall clock — else a parked request's retry ETA never arrives
+            now = max(now, float(self.clock()))
             deadlines = [q.next_deadline() for q in self._queues.values()
                          if len(q)]
-            self.step(max(float(self.clock()), min(deadlines)))
+            deadlines += [
+                self.admission.retry_eta(t.request.tenant,
+                                         t.request.latency_class,
+                                         t.request.size, now)
+                for t in self._deferred]
+            now = max(now, min(deadlines)) if deadlines else now
+            self.step(now)
         if flush:
             self._flush()
         return self._completed - done0
@@ -193,12 +332,27 @@ class ServeFrontend:
                 self._dispatch(q.take(), overlay=key[1], now=now)
 
     def _flush(self) -> None:
-        if self.service.pending_updates > 0:
+        """Synchronous flush: publish any in-flight shadow epoch AND drain
+        whatever the log holds (the freshness path — RYW khop/analytics
+        buy their consistency with a full epoch advance)."""
+        if self.service.flush_in_flight or self.service.pending_updates > 0:
             with obs.span("serve.flush", cat="serve",
                           pending=self.service.pending_updates):
                 self.service.flush()
             self._interleaved_flushes += 1
             self.metrics.counter("serve.interleaved_flushes").inc()
+
+    def _begin_flush(self) -> None:
+        with obs.span("serve.flush_begin", cat="serve",
+                      pending=self.service.pending_updates):
+            self.service.begin_flush()
+        self.metrics.counter("serve.flush_begins").inc()
+
+    def _finish_flush(self) -> None:
+        with obs.span("serve.flush_publish", cat="serve"):
+            self.service.finish_flush()
+        self._interleaved_flushes += 1
+        self.metrics.counter("serve.interleaved_flushes").inc()
 
     def _admit_queued_updates(self, now: float) -> None:
         """Force-admit every update still waiting in the frontend queue.
@@ -290,45 +444,79 @@ class ServeFrontend:
     def _run_point(self, mb: MicroBatch, overlay: bool, now: float) -> None:
         qs = self._fuse(mb, lambda r: r.qsrc, 0, np.int32)
         qd = self._fuse(mb, lambda r: r.qdst, 0, np.int32)
-        snapshot = self.service.snapshot
         if overlay:
-            found, w = ov.overlay_point_reads(snapshot,
-                                              self.service.pending_view(),
-                                              qs, qd)
+            arrs = ov.overlay_point_reads(self.service.snapshot,
+                                          self.service.pending_view(),
+                                          qs, qd)
+            version = self._version()
         else:
-            found, w = snap.query_edges(snapshot, qs, qd)
-        found, w = np.asarray(found), np.asarray(w)
-        for ticket, (off, req_off, width) in zip(mb.tickets, mb.spans):
-            self._offer(ticket, ("found", "w"),
-                        (found[off:off + width], w[off:off + width]),
-                        width, now, self._version(), req_off=req_off)
+            replica, arrs = self.read_plane.query_edges(qs, qd)
+            version = self.read_plane.version
+            self.metrics.counter("serve.replica_dispatch",
+                                 replica=str(replica)).inc()
+        self._inflight.append((mb, tuple(arrs), version))
 
     def _run_degree(self, mb: MicroBatch, overlay: bool, now: float) -> None:
         verts = self._fuse(mb, lambda r: r.verts, 0, np.int32)
-        snapshot = self.service.snapshot
         if overlay:
-            deg = ov.overlay_degrees(snapshot, self.service.pending_view(),
-                                     verts)
+            arrs = (ov.overlay_degrees(self.service.snapshot,
+                                       self.service.pending_view(), verts),)
+            version = self._version()
         else:
-            deg = snap.query_degrees(snapshot, verts)
-        deg = np.asarray(deg)
-        for ticket, (off, req_off, width) in zip(mb.tickets, mb.spans):
-            self._offer(ticket, ("deg",), (deg[off:off + width],),
-                        width, now, self._version(), req_off=req_off)
+            replica, arrs = self.read_plane.query_degrees(verts)
+            version = self.read_plane.version
+            self.metrics.counter("serve.replica_dispatch",
+                                 replica=str(replica)).inc()
+        self._inflight.append((mb, tuple(arrs), version))
 
     def _run_khop(self, mb: MicroBatch, overlay: bool, now: float) -> None:
         # read-your-writes for a whole-neighborhood read = flush first: the
         # per-key overlay cannot patch a sampled subgraph
         if overlay and self.freshness_flush:
             self._flush()
+            self.read_plane.broadcast(self.service.snapshot)
         seeds = self._fuse(mb, lambda r: r.seeds, 0, np.int32)
         salt = 0
         for t in mb.tickets:
             salt = (salt * 1000003 + int(t.request.seed) + t.id) & 0x7FFFFFFF
         key = jax.random.PRNGKey(salt)
-        snapshot = self.service.snapshot
-        sg = snap.sample_khop(snapshot, seeds, key, self.fanout)
-        sg_np = tuple(np.asarray(x) for x in sg)
+        if overlay:
+            sg = tuple(snap.sample_khop(self.service.snapshot, seeds, key,
+                                        self.fanout))
+            version = self._version()
+        else:
+            replica, sg = self.read_plane.sample_khop(seeds, key, self.fanout)
+            version = self.read_plane.version
+            self.metrics.counter("serve.replica_dispatch",
+                                 replica=str(replica)).inc()
+        self._inflight.append((mb, sg, version))
+
+    # -- pipelined collection: dispatched read batches -> completed tickets
+
+    def _collect(self, now: float) -> None:
+        """Sync each in-flight read mega-batch (dispatch order) and complete
+        its tickets: ONE blocking ``device_get`` per batch, attributed as
+        device time via ``obs.wait`` — not one host sync per result field."""
+        while self._inflight:
+            mb, arrs, version = self._inflight.pop(0)
+            vals = jax.device_get(obs.wait(arrs, "serve.read.sync",
+                                           kind=mb.kind))
+            if mb.kind == "point_read":
+                found, w = vals
+                for ticket, (off, req_off, width) in zip(mb.tickets, mb.spans):
+                    self._offer(ticket, ("found", "w"),
+                                (found[off:off + width], w[off:off + width]),
+                                width, now, version, req_off=req_off)
+            elif mb.kind == "degree_read":
+                deg = vals[0]
+                for ticket, (off, req_off, width) in zip(mb.tickets, mb.spans):
+                    self._offer(ticket, ("deg",), (deg[off:off + width],),
+                                width, now, version, req_off=req_off)
+            else:
+                self._complete_khop(mb, vals, now, version)
+
+    def _complete_khop(self, mb: MicroBatch, sg_np, now: float,
+                       version) -> None:
         # per-hop layout: seed lane i owns edge lanes [i*P_h, (i+1)*P_h)
         # inside hop h's segment, where P_h = prod(fanout[:h+1])
         hop_off, hop_P = [], []
@@ -346,8 +534,7 @@ class ServeFrontend:
             part = {"src": sg_np[0][idx], "dst": sg_np[1][idx],
                     "layer": sg_np[2][idx], "valid": sg_np[3][idx],
                     "seeds": ticket.request.seeds[req_off:req_off + width]}
-            self._offer(ticket, "khop_parts", part, width, now,
-                        self._version())
+            self._offer(ticket, "khop_parts", part, width, now, version)
 
     def _run_analytics(self, mb: MicroBatch, overlay: bool, now: float
                        ) -> None:
@@ -461,12 +648,32 @@ class ServeFrontend:
                 **shape_rep.get(kind, {"jit_cache_size": 0, "buckets": []}),
             }
         svc = self.service.stats
+
+        def _by_labels(name: str) -> Dict[str, float]:
+            return {f"{lbl['tenant']}/{lbl['cls']}": c.value
+                    for lbl, c in self.metrics.collect(name)}
+
+        replica_dispatches = {lbl["replica"]: int(c.value)
+                              for lbl, c in
+                              self.metrics.collect("serve.replica_dispatch")}
         return {
             "tenants": tenants,
             "kinds": kinds,
             "completed": self._completed,
+            "admission": {
+                "submitted": _by_labels("serve.submitted"),
+                "shed": _by_labels("serve.shed"),
+                "shed_lanes": _by_labels("serve.shed_lanes"),
+                "deferred": _by_labels("serve.deferred"),
+                "deferred_waiting": len(self._deferred),
+            },
+            "read_plane": {
+                "n_replicas": self.read_plane.n_replicas,
+                "dispatches_by_replica": replica_dispatches,
+            },
             "service": {"epoch": self.service.epoch,
                         "flushes": svc.flushes,
                         "interleaved_flushes": self._interleaved_flushes,
+                        "flush_in_flight": self.service.flush_in_flight,
                         "pending_updates": self.service.pending_updates},
         }

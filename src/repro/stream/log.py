@@ -168,6 +168,37 @@ def drain(log: UpdateLog) -> Tuple[UpdateLog, Tuple[jax.Array, jax.Array,
 
 
 @jax.jit
+def merge_views(shadow_src: jax.Array, shadow_dst: jax.Array,
+                shadow_w: jax.Array, shadow_op: jax.Array,
+                shadow_valid: jax.Array, log: UpdateLog) -> PendingView:
+    """Pending view spanning an in-flight shadow flush plus the live log.
+
+    While a double-buffered flush is building the next epoch
+    (:meth:`~repro.stream.service.GraphService.begin_flush`), the drained
+    records are no longer in the log but are not yet visible in any
+    snapshot.  Read-your-writes must keep covering them, so the overlay's
+    view becomes ``[shadow records | pending log records]`` re-coalesced
+    across the concatenation — the log records arrived later, so they
+    supersede shadow records on the same key, exactly as a flush draining
+    both windows in order would apply them.  Shapes are ``2C`` (jit-stable);
+    the overlay combines are shape-polymorphic so the wider view costs one
+    extra compile per query bucket, not a recompile per occupancy.
+    """
+    C = log.capacity
+    k = jnp.arange(C, dtype=jnp.int32)
+    n = log.tail - log.head
+    pos = (log.head + k) % C
+    lvalid = k < n
+    src = jnp.concatenate([shadow_src, jnp.where(lvalid, log.src[pos], 0)])
+    dst = jnp.concatenate([shadow_dst, jnp.where(lvalid, log.dst[pos], 0)])
+    w = jnp.concatenate([shadow_w, jnp.where(lvalid, log.w[pos], 0.0)])
+    op = jnp.concatenate([shadow_op, jnp.where(lvalid, log.op[pos], NOP)])
+    valid = jnp.concatenate([shadow_valid, lvalid])
+    return PendingView(src=src, dst=dst, w=w, op=op,
+                       live=_coalesce_mask(src, dst, valid))
+
+
+@jax.jit
 def peek(log: UpdateLog) -> PendingView:
     """Read (not pop) every pending record, coalesced across append batches.
 

@@ -106,6 +106,28 @@ class FlushReport(NamedTuple):
     maintenance: MaintenanceAction
 
 
+class _ShadowFlush:
+    """In-flight double-buffered flush: everything :meth:`begin_flush`
+    dispatched that :meth:`finish_flush` still needs.
+
+    ``records`` keeps the drained ``(src, dst, w, op, valid)`` arrays so the
+    read-your-writes view can span shadow + live log while the next epoch is
+    still being built; ``pre_cbl`` is the pre-update storage the grow-retry
+    loop replays onto (updates are pure, so the retry is exact); ``ustats``
+    is the *future* whose ``dropped_edges`` host sync is the whole point of
+    deferring — readers keep serving the pinned snapshot until
+    ``finish_flush`` blocks on it and swaps the pointer.
+    """
+
+    __slots__ = ("records", "watermark", "pre_cbl", "new_cbl", "ustats",
+                 "src2", "dst2", "w2", "op2", "n_ins", "net_deletes",
+                 "sealed_before")
+
+    def __init__(self, **kw):
+        for k, v in kw.items():
+            setattr(self, k, v)
+
+
 @dataclasses.dataclass
 class ServiceStats:
     admitted: int = 0             # records admitted into the log
@@ -167,6 +189,7 @@ class GraphService:
             policy = dataclasses.replace(policy,
                                          seal_after_epochs=seal_after_epochs)
         self._snap = snap.snapshot_of(cbl)
+        self._shadow: Optional[_ShadowFlush] = None
         self._log: UpdateLog = ulog.make_log(log_capacity)
         self._high_watermark = float(high_watermark)
         self._policy = policy
@@ -209,17 +232,47 @@ class GraphService:
 
     @property
     def pending_updates(self) -> int:
-        """Admitted records not yet visible to readers (staleness in ops)."""
+        """Admitted records waiting in the log (staleness in ops).
+
+        Records drained into an in-flight double-buffered flush are *not*
+        counted — they are already being applied; this is the count the
+        next :meth:`begin_flush`/:meth:`flush` would drain.
+        """
         return int(ulog.log_pending(self._log))
 
+    @property
+    def flush_in_flight(self) -> bool:
+        """A :meth:`begin_flush` is building the next epoch against the
+        shadow buffer (readers still see the pinned snapshot)."""
+        return self._shadow is not None
+
+    def flush_ready(self) -> bool:
+        """Non-blocking: has the in-flight flush's device work completed?
+        (False when nothing is in flight.)  The scheduler polls this to
+        publish opportunistically instead of stalling a read step on the
+        upsert's host sync."""
+        if self._shadow is None:
+            return False
+        dropped = self._shadow.ustats.dropped_edges
+        if hasattr(dropped, "is_ready"):
+            return bool(dropped.is_ready())
+        return True        # no readiness API: treat as ready (finish blocks)
+
     def pending_view(self) -> PendingView:
-        """Coalesced, non-destructive view of the pending log records.
+        """Coalesced, non-destructive view of the not-yet-visible records.
 
         The read-your-writes overlay (:mod:`repro.serve.overlay`) layers
         this atop the pinned snapshot so opted-in tenants read their own
         admitted-but-unflushed updates; the view's ``live`` mask carries the
         same last-op-per-key net effect the next :meth:`flush` will apply.
+
+        While a double-buffered flush is in flight the view spans *shadow +
+        log* (the drained records left the log but are not yet in any
+        snapshot), re-coalesced across the concatenation — RYW tenants read
+        shadow+pending, everyone else reads the pinned epoch.
         """
+        if self._shadow is not None:
+            return ulog.merge_views(*self._shadow.records, self._log)
         return ulog.peek(self._log)
 
     def query_edges(self, qsrc, qdst):
@@ -277,6 +330,12 @@ class GraphService:
         Loss-free: the ``dropped_edges`` overflow counter triggers a
         capacity grow and an exact retry on the pre-update CBList.
 
+        Synchronous composition of the double-buffered halves: publish any
+        in-flight :meth:`begin_flush` first, then drain whatever the log
+        still holds.  Every pre-existing call site keeps its exact
+        semantics — after ``flush()`` returns, everything admitted so far
+        is visible in the new snapshot.
+
         Under :mod:`repro.obs` the flush is broken into phase spans —
         admission (drain), coalesce, proactive headroom decide, upsert
         (per-shard when sharded), grow-retries, and maintenance — with
@@ -284,9 +343,44 @@ class GraphService:
         time go" without printf archaeology.
         """
         with obs.span("service.flush", cat="flush", epoch=self.epoch):
-            return self._flush_traced()
+            if self._shadow is None:
+                self._begin()
+                return self._finish()
+            report = self._finish()
+            if int(ulog.log_pending(self._log)) > 0:
+                self._begin()
+                report = self._finish()
+            return report
 
-    def _flush_traced(self) -> FlushReport:
+    def begin_flush(self) -> None:
+        """Start a double-buffered flush: drain the log and *dispatch* the
+        next epoch's arrays against a shadow buffer without blocking on the
+        result.
+
+        The pinned :class:`Snapshot` keeps serving — every read path is
+        untouched until :meth:`finish_flush` host-syncs the overflow counter
+        and swaps the snapshot pointer.  JAX async dispatch does the
+        pipelining: the upsert runs on device while the host keeps batching
+        reads.  Calling again while one is in flight publishes the previous
+        epoch first (epochs are ordered; two shadows would race the retry
+        loop's pre-update storage).
+        """
+        if self._shadow is not None:
+            self._finish()
+        with obs.span("service.flush_begin", cat="flush", epoch=self.epoch):
+            self._begin()
+
+    def finish_flush(self) -> Optional[FlushReport]:
+        """Publish the in-flight shadow flush (no-op when none is in
+        flight): block on the upsert's overflow counter, run grow-retries
+        and post-apply maintenance, and advance the snapshot — the epoch
+        swap readers observe is one pointer assignment."""
+        if self._shadow is None:
+            return None
+        with obs.span("service.flush_publish", cat="flush", epoch=self.epoch):
+            return self._finish()
+
+    def _begin(self) -> None:
         with obs.span("flush.admission", cat="flush"):
             self._log, (s, d, w, op, valid) = ulog.drain(self._log)
             watermark = int(self._log.head)
@@ -335,12 +429,28 @@ class GraphService:
         sealed_before = (np.asarray(cbl.sealed)
                          if isinstance(cbl, TieredGraph) else None)
 
+        # dispatch the first upsert attempt without blocking: the shadow
+        # holds the async ustats future; _finish owns the dropped_edges
+        # host sync and the grow-retry loop
+        with obs.span("flush.upsert", cat="flush",
+                      lanes=int(src2.shape[0]), retry=0):
+            new_cbl, ustats = batch_update_stats(cbl, src2, dst2, w2, op2)
+        self._shadow = _ShadowFlush(
+            records=(s, d, w, op, valid), watermark=watermark, pre_cbl=cbl,
+            new_cbl=new_cbl, ustats=ustats, src2=src2, dst2=dst2, w2=w2,
+            op2=op2, n_ins=n_ins, net_deletes=net_deletes,
+            sealed_before=sealed_before)
+
+    def _finish(self) -> FlushReport:
+        sh = self._shadow
+        self._shadow = None
+        watermark, net_deletes = sh.watermark, sh.net_deletes
+        cbl, new_cbl, ustats = sh.pre_cbl, sh.new_cbl, sh.ustats
+        src2, dst2, w2, op2 = sh.src2, sh.dst2, sh.w2, sh.op2
+
         grow_retries = 0
         while True:
-            with obs.span("flush.upsert", cat="flush",
-                          lanes=int(src2.shape[0]), retry=grow_retries):
-                new_cbl, ustats = batch_update_stats(cbl, src2, dst2, w2, op2)
-                dropped = int(ustats.dropped_edges)
+            dropped = int(obs.wait(ustats.dropped_edges, "flush.upsert.sync"))
             if dropped == 0:
                 break
             if grow_retries >= MAX_GROW_RETRIES:
@@ -359,7 +469,11 @@ class GraphService:
             obs.counter("flush.grow_retries").inc()
             grow_retries += 1
             self.stats.grows += 1
+            with obs.span("flush.upsert", cat="flush",
+                          lanes=int(src2.shape[0]), retry=grow_retries):
+                new_cbl, ustats = batch_update_stats(cbl, src2, dst2, w2, op2)
         cbl = new_cbl
+        sealed_before = sh.sealed_before
         if sealed_before is not None:
             # writes into the sealed tier moved their vertices back to the
             # delta inside batch_update_stats — surface that in the stats

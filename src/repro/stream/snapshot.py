@@ -73,6 +73,22 @@ def advance(snap: Snapshot, cbl: CBList, watermark: jax.Array) -> Snapshot:
                     run_version=_run_version_of(cbl))
 
 
+def device_replica(snap: Snapshot, device) -> Snapshot:
+    """The same pinned version with its storage arrays copied to ``device``.
+
+    Snapshots are immutable pytrees, so a replica is a plain asynchronous
+    ``device_put`` of the storage — epoch/watermark/run_version identify the
+    identical view, and every read path (point / degree / khop) dispatches
+    on the storage type, so CBList, TieredGraph, and ShardedCBList replicas
+    all serve bit-identical answers from wherever the copy lands.  (A
+    sharded stack collapses to one device per replica — the shard *mesh*
+    placement belongs to the writer; read replicas only need the arrays.)
+    """
+    return Snapshot(cbl=jax.device_put(snap.cbl, device),
+                    epoch=snap.epoch, watermark=snap.watermark,
+                    run_version=snap.run_version)
+
+
 # ---- batched read path (all served from the pinned version) ---------------
 
 def query_edges(snap: Snapshot, qsrc: jax.Array, qdst: jax.Array
