@@ -1,0 +1,268 @@
+"""Perf-regression gate: diff fresh ``BENCH_*.json`` against baselines.
+
+The generalization of the ad-hoc guard env vars
+(``REPRO_SHARD_WRITE_GUARD``, ``REPRO_SERVE_READ_GUARD``): one CLI that
+compares freshly produced bench dumps row-by-row against committed
+baselines and exits nonzero on regression, so CI gates perf the same way
+it gates correctness.
+
+    python benchmarks/check_regress.py                  # fresh=. vs git:HEAD
+    python benchmarks/check_regress.py --fresh out/ --baseline git:HEAD
+    python benchmarks/check_regress.py --baseline baselines_dir/
+    python benchmarks/check_regress.py --tolerance 0.8 --bench shard serve
+
+Three kinds of checks, in decreasing strictness:
+
+  * **guard floors** — scale-invariant ratio statistics each bench records
+    about itself (sharded write scaling at 2 shards, replica read speedup
+    at 2 replicas) checked against their floors.  The floor comes from the
+    guard env var when set, else from the value the bench recorded in its
+    own summary (``write_guard`` / ``read_guard``).  A bench that recorded
+    a skip marker (``read_guard_skipped`` — e.g. forced host devices with
+    one core have no parallel read capacity) skips its guard, exactly like
+    the in-bench check it generalizes.
+  * **ratio metrics vs baseline** — summary ratios (``write_scaling_2s``,
+    ``point_read_speedup_batched_vs_loop``, replica-curve speedups) must
+    not drop below ``baseline × (1 - tol)``.
+  * **per-row timing vs baseline** — every row's ``us_per_call`` must stay
+    under ``baseline × (1 + tol)``.
+
+  Both baseline-relative checks run only when fresh and baseline were
+  produced at the same ``meta.bench_scale`` (results at 0.25 scale are not
+  comparable to committed 1.0-scale baselines; the skip is reported, never
+  silent).  Across scales — the CI case — the guard floors are the gate.
+
+The default baseline source is ``git:HEAD`` — the committed BENCH files —
+because a fresh bench run overwrites the working-tree copies in place, so
+"the file on disk" is usually the fresh result, not the baseline.
+
+Exit status: 0 all green, 1 at least one regression, 2 usage error /
+no comparable files.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+from typing import Dict, List, Optional, Tuple
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# default slack factors: bench timings in CI are noisy (shared runners,
+# cold caches), so the row gate catches step-function regressions (a 2x
+# slowdown), not 5% drift; ratio metrics are steadier and get a tighter band
+DEFAULT_ROW_TOLERANCE = 1.0      # us_per_call may grow up to (1 + tol)x
+DEFAULT_RATIO_TOLERANCE = 0.5    # ratio metrics may drop to (1 - tol)x
+
+# per-row-prefix tolerance overrides (first matching prefix wins): rows
+# known to be noisier than the default band
+ROW_TOLERANCE_OVERRIDES: Tuple[Tuple[str, float], ...] = (
+    ("serve/replay", 2.0),        # end-to-end replay: scheduler + jit noise
+    ("interleave/", 2.0),         # flush/read interleaving is timing-shaped
+)
+
+# scale-invariant ratio statistics per bench: (json-path, label).  A path
+# element indexes dicts; these survive REPRO_BENCH_SCALE changes, so they
+# are compared against the baseline even when absolute timings are not.
+RATIO_METRICS: Dict[str, List[Tuple[Tuple[str, ...], str]]] = {
+    "shard": [(("write_scaling_2s",), "write_scaling_2s")],
+    "serve": [
+        (("point_read_speedup_batched_vs_loop",), "point_read_speedup"),
+        (("replica_curve", "2", "speedup_vs_sequential"),
+         "replica2_speedup"),
+    ],
+}
+
+# guard floors: env var -> (bench, json-path, summary key holding the
+# recorded floor, skip-marker key).  The env var overrides the recorded
+# floor; the skip marker (when present in the summary) waives the check.
+GUARDS = (
+    ("REPRO_SHARD_WRITE_GUARD", "shard", ("write_scaling_2s",),
+     "write_guard", None),
+    ("REPRO_SERVE_READ_GUARD", "serve",
+     ("replica_curve", "2", "speedup_vs_sequential"),
+     "read_guard", "read_guard_skipped"),
+)
+
+
+def _dig(d: dict, path: Tuple[str, ...]):
+    for key in path:
+        if not isinstance(d, dict) or key not in d:
+            return None
+        d = d[key]
+    return d
+
+
+def _row_tolerance(name: str, default: float) -> float:
+    for prefix, tol in ROW_TOLERANCE_OVERRIDES:
+        if name.startswith(prefix):
+            return tol
+    return default
+
+
+def load_fresh(fresh_dir: str, benches: Optional[List[str]]) -> Dict[str, dict]:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(fresh_dir, "BENCH_*.json"))):
+        short = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        if benches and short not in benches:
+            continue
+        try:
+            with open(path) as f:
+                out[short] = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"check_regress: cannot read {path}: {e}", file=sys.stderr)
+    return out
+
+
+def load_baseline(source: str, short: str) -> Optional[dict]:
+    """Baseline dump for one bench: ``git:<rev>`` reads the committed file
+    (the working-tree copy is usually the fresh result), a directory reads
+    ``<dir>/BENCH_<short>.json``."""
+    if source.startswith("git:"):
+        rev = source[len("git:"):] or "HEAD"
+        proc = subprocess.run(
+            ["git", "show", f"{rev}:BENCH_{short}.json"],
+            capture_output=True, text=True, cwd=REPO_ROOT)
+        if proc.returncode != 0:
+            return None
+        try:
+            return json.loads(proc.stdout)
+        except json.JSONDecodeError:
+            return None
+    path = os.path.join(source, f"BENCH_{short}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+class Gate:
+    """Accumulates check results and renders the report."""
+
+    def __init__(self):
+        self.failures: List[str] = []
+        self.passes = 0
+        self.skips: List[str] = []
+
+    def check(self, ok: bool, label: str) -> None:
+        if ok:
+            self.passes += 1
+        else:
+            self.failures.append(label)
+            print(f"  FAIL {label}")
+
+    def skip(self, label: str) -> None:
+        self.skips.append(label)
+        print(f"  skip {label}")
+
+
+def compare_bench(short: str, fresh: dict, base: Optional[dict],
+                  gate: Gate, row_tol: float, ratio_tol: float) -> None:
+    print(f"== {short}")
+    summary = fresh.get("summary", {})
+
+    # 1. guard floors over the fresh summary (baseline not required)
+    for env, bench, path, floor_key, skip_key in GUARDS:
+        if bench != short:
+            continue
+        value = _dig(summary, path)
+        if skip_key and summary.get(skip_key):
+            gate.skip(f"{short}: guard {env} ({summary.get(skip_key)})")
+            continue
+        floor = os.environ.get(env) or summary.get(floor_key)
+        if value is None or floor is None:
+            gate.skip(f"{short}: guard {env} (metric or floor absent)")
+            continue
+        floor = float(floor)
+        gate.check(float(value) >= floor,
+                   f"{short}: {'/'.join(path)}={float(value):.3f} "
+                   f"below guard floor {floor:g} ({env})")
+
+    if base is None:
+        gate.skip(f"{short}: no baseline")
+        return
+    base_summary = base.get("summary", {})
+
+    # baseline-relative checks need comparable runs: same bench_scale
+    # (at mismatched scale — CI smoke at 0.25 vs committed 1.0 — the guard
+    # floors above are the gate)
+    f_scale = (fresh.get("meta") or {}).get("bench_scale")
+    b_scale = (base.get("meta") or {}).get("bench_scale")
+    if f_scale != b_scale:
+        gate.skip(f"{short}: baseline-relative checks (scale {f_scale} vs "
+                  f"baseline {b_scale})")
+        return
+
+    # 2. summary ratio metrics vs baseline
+    for path, label in RATIO_METRICS.get(short, []):
+        cur, prev = _dig(summary, path), _dig(base_summary, path)
+        if cur is None or prev is None:
+            continue
+        if short == "serve" and (summary.get("read_guard_skipped")
+                                 or base_summary.get("read_guard_skipped")) \
+                and label.startswith("replica"):
+            gate.skip(f"{short}: {label} (read guard skipped)")
+            continue
+        floor = float(prev) * (1.0 - ratio_tol)
+        gate.check(float(cur) >= floor,
+                   f"{short}: {label}={float(cur):.3f} regressed below "
+                   f"{floor:.3f} (baseline {float(prev):.3f}, "
+                   f"tol {ratio_tol:g})")
+
+    # 3. per-row us_per_call vs baseline
+    base_rows = {r.get("name"): r for r in base.get("rows", [])}
+    for row in fresh.get("rows", []):
+        name = row.get("name")
+        prev = base_rows.get(name)
+        if prev is None or not prev.get("us_per_call") \
+                or row.get("us_per_call") is None:
+            continue
+        tol = _row_tolerance(name, row_tol)
+        ceil = float(prev["us_per_call"]) * (1.0 + tol)
+        gate.check(float(row["us_per_call"]) <= ceil,
+                   f"{short}: {name} us_per_call={row['us_per_call']:.1f} "
+                   f"above {ceil:.1f} (baseline {prev['us_per_call']:.1f}, "
+                   f"tol {tol:g})")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default=".",
+                    help="directory holding freshly produced BENCH_*.json "
+                         "(default: current directory)")
+    ap.add_argument("--baseline", default="git:HEAD",
+                    help="baseline source: git:<rev> (committed files, "
+                         "default git:HEAD) or a directory")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_ROW_TOLERANCE,
+                    help="per-row us_per_call slack factor (fresh may be up "
+                         f"to (1+tol)x baseline; default "
+                         f"{DEFAULT_ROW_TOLERANCE})")
+    ap.add_argument("--ratio-tolerance", type=float,
+                    default=DEFAULT_RATIO_TOLERANCE,
+                    help="ratio-metric slack (fresh may drop to (1-tol)x "
+                         f"baseline; default {DEFAULT_RATIO_TOLERANCE})")
+    ap.add_argument("--bench", nargs="*", default=None,
+                    help="restrict to these bench shorts (e.g. shard serve)")
+    args = ap.parse_args(argv)
+
+    fresh = load_fresh(args.fresh, args.bench)
+    if not fresh:
+        print(f"check_regress: no BENCH_*.json under {args.fresh!r}",
+              file=sys.stderr)
+        return 2
+    gate = Gate()
+    for short, dump in sorted(fresh.items()):
+        base = load_baseline(args.baseline, short)
+        compare_bench(short, dump, base, gate,
+                      row_tol=args.tolerance,
+                      ratio_tol=args.ratio_tolerance)
+    print(f"check_regress: {gate.passes} checks passed, "
+          f"{len(gate.failures)} failed, {len(gate.skips)} skipped")
+    return 1 if gate.failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,22 +23,27 @@ import repro.obs as obs
 from benchmarks.common import dataset
 from repro.core import DELETE, INSERT
 from repro.core.tuner import ServePlan
+from repro.obs import SloTracker
 from repro.serve import DegreeRead, ManualClock, PointRead, ServeFrontend
 from repro.stream import GraphService
 
 TRACE_PATH = "TRACE_flush.json"
+OBS_REPORT_PATH = "OBS_report.json"
 N_CYCLES = 3
 BATCH = 192
 
 
-def run(trace_path: str = TRACE_PATH) -> dict:
+def run(trace_path: str = TRACE_PATH,
+        report_path: str = OBS_REPORT_PATH) -> dict:
     obs.enable()
     obs.reset()
+    bus = obs.signal_bus()
     rng = np.random.default_rng(7)
     nv, src, dst, w = dataset("rmat_tiny")
     svc = GraphService.from_coo(np.asarray(src), np.asarray(dst),
                                 np.asarray(w), num_vertices=nv,
-                                log_capacity=1024, n_shards=2)
+                                log_capacity=1024, n_shards=2,
+                                signals=bus)
 
     # streamed apply/flush cycles: admission -> coalesce -> per-shard
     # upsert -> maintenance, all under spans
@@ -63,7 +68,11 @@ def run(trace_path: str = TRACE_PATH) -> dict:
                               "batch": 0.020},
                      flush_pending_max=1024, arrival_lanes_per_s=0.0)
     clock = ManualClock()
-    front = ServeFrontend(svc, plan, clock=clock)
+    slo = SloTracker(clock=clock)
+    slo.set_objective("demo", "interactive", latency_target_s=0.001)
+    slo.set_objective("demo", "batch", latency_target_s=0.020,
+                      target_fraction=0.9)
+    front = ServeFrontend(svc, plan, clock=clock, signals=bus, slo=slo)
     front.register_tenant("demo")
     for _ in range(64):
         clock.advance(float(rng.exponential(1.0 / 500.0)))
@@ -71,16 +80,21 @@ def run(trace_path: str = TRACE_PATH) -> dict:
         if rng.random() < 0.7:
             i = rng.integers(0, len(src), size)
             front.submit(PointRead(qsrc=np.asarray(src)[i],
-                                   qdst=np.asarray(dst)[i], tenant="demo"))
+                                   qdst=np.asarray(dst)[i], tenant="demo",
+                                   latency_class="interactive"))
         else:
             front.submit(DegreeRead(verts=rng.integers(0, nv, size),
-                                    tenant="demo"))
+                                    tenant="demo", latency_class="batch"))
         front.step()
     front.drain(flush=True)
 
     path = obs.dump_trace(trace_path)
-    report = obs.report()
-    return {"trace_path": path, "report": report}
+    report = obs.report()   # includes derived signals (the bus is live)
+    # CI build artifact: the full obs report + SLO summary next to the trace
+    with open(report_path, "w") as f:
+        json.dump({"report": report, "slo": front.report()["slo"]},
+                  f, indent=1, default=str)
+    return {"trace_path": path, "report_path": report_path, "report": report}
 
 
 def main() -> None:
@@ -88,7 +102,8 @@ def main() -> None:
     rep = out["report"]
     names = sorted(rep["spans"])
     print(f"wrote {out['trace_path']} "
-          f"({rep['trace_events']} events, {rep['trace_dropped']} dropped)",
+          f"({rep['trace_events']} events, {rep['trace_dropped']} dropped) "
+          f"and {out['report_path']}",
           file=sys.stderr)
     summary = {
         "trace": out["trace_path"],
@@ -98,6 +113,7 @@ def main() -> None:
                      sorted(rep["metrics"]["counters"].items())},
         "flush_upsert_series": sorted(
             k for k in rep["metrics"]["series"] if "flush.upsert" in k),
+        "signals": sorted(rep.get("signals", {}).get("signals", {})),
     }
     json.dump(summary, sys.stdout, indent=1, default=float)
     print()

@@ -46,6 +46,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+import repro.obs as obs
 from repro.core.engine import (SEMIRINGS, process_edge_pull,
                                process_edge_push, process_edge_push_feat)
 
@@ -395,6 +396,9 @@ def run_program(cbl, prog: VertexProgram, *, warm=None,
         params.setdefault(k, v)
     static_kv = tuple(sorted(
         (k, params.pop(k)) for k in prog.static_params if k in params))
+    # jit-honest locality profile: taken here at the host-side entry point,
+    # outside the traced sweep (one flag check when obs is off)
+    obs.record_sweep(cbl, task=prog.task)
     return _run_program(cbl, warm, params, prog=prog, impl=impl,
                         max_iters=int(max_iters), static_kv=static_kv,
                         return_stats=return_stats)

@@ -363,6 +363,8 @@ def _repartition(tg: TieredGraph, new_sealed: jax.Array) -> TieredGraph:
         if obs.enabled():
             jax.block_until_ready(jax.tree.leaves(out))
     obs.series("tier.repartition_s").observe(sp.get("dur", 0.0))
+    obs.histogram("tier.repartition_hist_s", obs.LATENCY_BUCKETS_S).observe(
+        sp.get("dur", 0.0))
     obs.counter("tier.repartitions").inc()
     if obs.enabled():
         obs.gauge("tier.sealed_fraction").set(float(out.sealed_fraction))

@@ -57,6 +57,10 @@ class SystemProbe:
     remote_message_overhead_us: float = 2.0  # per-block cross-shard collective cost
     vmem_bytes: int = 64 * 2 ** 20      # ~64 MiB usable VMEM on v5e half?  -> lookahead cap
     max_lookahead: int = 8
+    replica_read_lanes_per_s: float = 250_000.0  # read lanes/s one snapshot
+                                                 # replica absorbs (sizes the
+                                                 # read plane from measured
+                                                 # pressure)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +76,9 @@ class ExecPlan:
     sealed_fraction: float = 0.0  # tiered: share of edges in the sealed tier
     route_lane_cap: int = 0  # sharded write path: per-shard routed lane cap
     route_rounds: int = 1    # sharded write path: expected spill rounds
+    seal_after_epochs: Optional[int] = None  # tiered: churn-adapted seal
+                                             # threshold advisory (None =
+                                             # keep the policy's static K)
 
 
 # ---- sharded write-path cost model ----------------------------------------
@@ -162,7 +169,8 @@ def choose_lookahead(probe: SystemProbe, block_bytes: int) -> int:
 
 
 def choose_plan(cbl, task, probe: Optional[SystemProbe] = None,
-                on_tpu: Optional[bool] = None) -> ExecPlan:
+                on_tpu: Optional[bool] = None,
+                signals=None, policy=None) -> ExecPlan:
     """Execution strategy tuner (paper Fig. 8).
 
     ``task``: a :class:`~repro.core.program.VertexProgram` (the plan keys
@@ -174,6 +182,16 @@ def choose_plan(cbl, task, probe: Optional[SystemProbe] = None,
     :class:`~repro.distributed.graph.ShardedCBList`; sharded plans report
     the cut fraction (remote-message share) alongside contiguity so bench
     output can correlate plan choices with shard scaling.
+
+    ``signals`` (an :class:`repro.obs.SignalView`) closes the obs loop: a
+    measured ``sweep_contiguity`` signal replaces the recomputed P_h
+    statistic (same quantity, observed over real sweeps instead of
+    rescanned), and on tiered storage a measured ``unseal_churn`` signal
+    adapts the seal threshold K via ``policy.adapted(signals)`` — the
+    adapted K is reported as ``plan.seal_after_epochs``.  ``policy`` is the
+    base :class:`~repro.stream.maintenance.MaintenancePolicy` the
+    adaptation starts from (tiered only).  With ``signals=None`` the plan
+    is bit-identical to the static decision.
     """
     task = getattr(task, "task", task)       # VertexProgram -> its metadata
     probe = probe or SystemProbe()
@@ -186,15 +204,22 @@ def choose_plan(cbl, task, probe: Optional[SystemProbe] = None,
         # whose only knob is whether its lane extent amortizes the Pallas
         # stream setup.  The sealed fraction is reported so bench output can
         # correlate plan choices with tier occupancy.
-        plan = choose_plan(cbl.delta, task, probe, on_tpu=on_tpu)
+        plan = choose_plan(cbl.delta, task, probe, on_tpu=on_tpu,
+                           signals=signals)
         run_impl = ("pallas" if on_tpu and task == "scan_all"
                     and cbl.run_capacity >= MIN_PALLAS_LANES else "xla")
         plan = dataclasses.replace(
             plan, run_impl=run_impl,
             sealed_fraction=float(cbl.sealed_fraction))
+        if signals is not None and policy is not None \
+                and policy.seal_after_epochs is not None:
+            adapted = policy.adapted(signals)
+            plan = dataclasses.replace(
+                plan, seal_after_epochs=adapted.seal_after_epochs)
         obs.decision("choose_plan.tiered", task=str(task), run_impl=run_impl,
                      sealed_fraction=round(plan.sealed_fraction, 4),
                      run_capacity=int(cbl.run_capacity),
+                     seal_after_epochs=plan.seal_after_epochs,
                      rule=("run lanes >= pallas floor" if run_impl == "pallas"
                            else "run lanes below pallas floor or off-TPU"))
         return plan
@@ -211,6 +236,14 @@ def choose_plan(cbl, task, probe: Optional[SystemProbe] = None,
         contiguity = float(shard_contiguity(cbl))
         frac_chunks = float((cbl.v_level <= 1).mean())
         lanes = cbl.num_blocks * cbl.block_width   # per-shard kernel extent
+    contiguity_source = "scan"
+    sig_contig = signals.get("sweep_contiguity") if signals is not None \
+        else None
+    if sig_contig is not None:
+        # measured P_h from real sweeps (locality profiler via the signal
+        # bus) replaces the rescanned statistic — same quantity, observed
+        contiguity = float(sig_contig.mean)
+        contiguity_source = "measured"
     block_bytes = cbl.block_width * 8                          # key+val lanes
     lookahead = choose_lookahead(probe, block_bytes)
 
@@ -269,6 +302,7 @@ def choose_plan(cbl, task, probe: Optional[SystemProbe] = None,
     obs.decision("choose_plan", task=str(task), strategy=strategy, impl=impl,
                  partition=partition, rule=rule, n_shards=n_shards,
                  contiguity=round(contiguity, 4),
+                 contiguity_source=contiguity_source,
                  cut_fraction=round(cut, 4), exposed_us=round(exposed, 4),
                  lanes=int(lanes), lookahead=lookahead, on_tpu=bool(on_tpu))
     return plan
@@ -299,6 +333,11 @@ def _pow2_at_least(n: int) -> int:
 
 SERVE_BUDGET_HEADROOM = 2.0   # per-(tenant, class) budget = headroom × fair rate
 SERVE_BUDGET_BURST_BUCKETS = 4   # burst allowance in largest-bucket units
+# target utilization of one replica's read capacity when sizing the read
+# plane from measured pressure (headroom absorbs bursts between retunes)
+SERVE_REPLICA_TARGET_UTIL = 0.75
+# signal samples required before a measured rate overrides a static kwarg
+MIN_SIGNAL_SAMPLES = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -336,7 +375,9 @@ def choose_serve_plan(arrival_qps: float, mean_lanes_per_request: float = 8.0,
                       log_capacity: int = 4096,
                       high_watermark: float = 0.75,
                       n_replicas: int = 1,
-                      tenant_budget_qps: Optional[float] = None) -> ServePlan:
+                      tenant_budget_qps: Optional[float] = None,
+                      signals=None,
+                      max_replicas: Optional[int] = None) -> ServePlan:
     """Size the frontend's bucket ladder and dispatch windows from the
     observed arrival rate (the serving analogue of ``choose_plan``: pick
     the batching strategy from a measured system statistic, not a constant).
@@ -358,7 +399,41 @@ def choose_serve_plan(arrival_qps: float, mean_lanes_per_request: float = 8.0,
     largest buckets — sized so a tenant at its declared rate never sheds,
     while a storm is bounded at the headroom multiple instead of starving
     every other tenant's p99.  ``None`` leaves admission off.
+
+    ``signals`` (an :class:`repro.obs.SignalView`) closes the loop the
+    ROADMAP asks for: a measured ``arrival_qps`` signal replaces the
+    ``arrival_qps`` kwarg, and a measured ``read_lanes_per_s`` signal sizes
+    ``n_replicas`` — enough replicas that each runs at
+    ``SERVE_REPLICA_TARGET_UTIL`` of ``probe.replica_read_lanes_per_s``,
+    clamped to ``max_replicas`` (the local device count by default).  Each
+    override needs ``MIN_SIGNAL_SAMPLES`` windowed samples, and every
+    adapted knob lands in the decision log with the signal values that
+    fired.  With ``signals=None`` the plan is bit-identical to the static
+    one.
     """
+    adapted = {}                 # knob -> firing signal values (decision log)
+    if signals is not None:
+        sig_qps = signals.get("arrival_qps")
+        if sig_qps is not None and sig_qps.n >= MIN_SIGNAL_SAMPLES:
+            arrival_qps = sig_qps.mean
+            adapted["arrival_qps"] = {
+                "mean": round(sig_qps.mean, 2), "last": round(sig_qps.last, 2),
+                "n": sig_qps.n}
+        sig_lanes = signals.get("read_lanes_per_s")
+        if sig_lanes is not None and sig_lanes.n >= MIN_SIGNAL_SAMPLES:
+            probe = probe or SystemProbe()
+            cap = (probe.replica_read_lanes_per_s
+                   * SERVE_REPLICA_TARGET_UTIL)
+            if max_replicas is None:
+                max_replicas = jax.local_device_count()
+            want = int(-(-max(sig_lanes.mean, 0.0) // max(cap, 1.0)))
+            n_replicas = min(max(1, want), max(1, int(max_replicas)))
+            adapted["n_replicas"] = {
+                "read_lanes_per_s_mean": round(sig_lanes.mean, 2),
+                "read_lanes_per_s_last": round(sig_lanes.last, 2),
+                "n": sig_lanes.n,
+                "replica_capacity_lanes_per_s": round(cap, 2),
+                "max_replicas": int(max_replicas)}
     lane_rate = max(arrival_qps, 1.0) * max(mean_lanes_per_request, 1.0)
     batch_hi = SERVE_WINDOW_CLAMPS["batch"][1]
     # an update mega-batch must clear the log's high-watermark admission
@@ -398,6 +473,13 @@ def choose_serve_plan(arrival_qps: float, mean_lanes_per_request: float = 8.0,
         arrival_qps, lane_rate, plan.bucket_set,
         {k: round(v, 4) for k, v in windows.items()}, plan.flush_pending_max,
         n_replicas, budget_rate)
+    rule = (f"fill largest bucket to {SERVE_TARGET_OCCUPANCY:g} "
+            f"occupancy inside class clamps (ladder capped by "
+            f"watermarked log admission); budgets "
+            f"{SERVE_BUDGET_HEADROOM:g}x declared rate x replicas")
+    if adapted:
+        rule += ("; adapted from measured signals: "
+                 + ", ".join(sorted(adapted)))
     obs.decision("choose_serve_plan", arrival_qps=round(arrival_qps, 2),
                  lanes_per_s=round(lane_rate, 2),
                  bucket_set=list(plan.bucket_set),
@@ -405,10 +487,8 @@ def choose_serve_plan(arrival_qps: float, mean_lanes_per_request: float = 8.0,
                  flush_pending_max=plan.flush_pending_max,
                  n_replicas=n_replicas,
                  budget_lanes_per_s=round(budget_rate, 2),
-                 rule=f"fill largest bucket to {SERVE_TARGET_OCCUPANCY:g} "
-                      f"occupancy inside class clamps (ladder capped by "
-                      f"watermarked log admission); budgets "
-                      f"{SERVE_BUDGET_HEADROOM:g}x declared rate x replicas")
+                 adapted=adapted or None,
+                 rule=rule)
     return plan
 
 

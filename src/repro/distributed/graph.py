@@ -612,6 +612,10 @@ def sharded_batch_update_stats(scbl: ShardedCBList, src: jax.Array,
             lane_cap=route.lane_cap, n_rounds=route.n_rounds)
     obs.counter("flush.spill_rounds").inc(route.n_rounds - 1)
     obs.series("flush.shard_skew").observe(route.skew)
+    # fused-lane utilization: active records over provisioned upsert lanes
+    # (low values mean the lane cap is sized for skew the batch didn't have)
+    obs.series("flush.route_occupancy").observe(
+        float(counts_np.sum()) / max(route.n_rounds * route.lane_cap * S, 1))
 
     shards = scbl.shards
     per_round = []

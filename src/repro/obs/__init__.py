@@ -37,8 +37,12 @@ import os
 from typing import Callable, Optional
 
 from repro.obs import metrics as metrics_mod
-from repro.obs.metrics import (NULL, Registry, count_bucket, delta,
-                               guarded_percentiles, percentile_min_n)
+from repro.obs.metrics import (LATENCY_BUCKETS_S, NULL, Registry,
+                               count_bucket, delta, guarded_percentiles,
+                               log_buckets, percentile_min_n)
+from repro.obs.signals import (EMPTY_VIEW, SignalBus, SignalSummary,
+                               SignalView)
+from repro.obs.slo import Objective, SloTracker
 from repro.obs.trace import NULL_SPAN, Tracer
 
 __all__ = [
@@ -47,7 +51,9 @@ __all__ = [
     "attribute",
     "decision", "report", "dump_trace", "reset",
     "Registry", "Tracer", "count_bucket", "delta", "guarded_percentiles",
-    "percentile_min_n",
+    "percentile_min_n", "log_buckets", "LATENCY_BUCKETS_S",
+    "SignalBus", "SignalView", "SignalSummary", "EMPTY_VIEW", "signal_bus",
+    "Objective", "SloTracker", "record_sweep", "sweep_profile",
 ]
 
 
@@ -58,6 +64,7 @@ def _env_flag(name: str) -> bool:
 _enabled = _env_flag("REPRO_OBS")
 _registry = Registry()
 _tracer = Tracer(jax_annotations=_env_flag("REPRO_OBS_JAX"))
+_signal_bus: Optional[SignalBus] = None
 
 
 # ---- switches --------------------------------------------------------------
@@ -86,6 +93,34 @@ def tracer() -> Tracer:
 def set_clock(clock: Callable[[], float]) -> None:
     """Inject a virtual clock into the tracer (tests, trace replay)."""
     _tracer.clock = clock
+
+
+def signal_bus() -> SignalBus:
+    """The global :class:`SignalBus` over the global registry (created on
+    first use).  Subsystems that accept ``signals=`` share this bus unless
+    handed a private one; like the registry it exists regardless of the
+    enabled flag, but only accumulates samples while obs is on (a bus over
+    a silent registry derives nothing)."""
+    global _signal_bus
+    if _signal_bus is None:
+        _signal_bus = SignalBus(_registry)
+    return _signal_bus
+
+
+def record_sweep(storage, task: str = "sweep"):
+    """Profile one sweep's locality (:mod:`repro.obs.locality`) — no-op
+    returning None when disabled."""
+    if not _enabled:
+        return None
+    from repro.obs.locality import record_sweep as _impl
+    return _impl(storage, task=task)
+
+
+def sweep_profile(storage) -> dict:
+    """Locality statistics of ``storage`` regardless of the enabled flag
+    (see :func:`repro.obs.locality.sweep_profile`)."""
+    from repro.obs.locality import sweep_profile as _impl
+    return _impl(storage)
 
 
 # ---- metric accessors (null objects when disabled) ------------------------
@@ -152,7 +187,7 @@ def report() -> dict:
     """The whole system's observability state as one nested dict:
     registry snapshot (counters/gauges/histograms/series), per-span-name
     timing aggregates, and the structured decision log."""
-    return {
+    out = {
         "enabled": _enabled,
         "metrics": _registry.snapshot(),
         "spans": _tracer.aggregate(),
@@ -160,6 +195,9 @@ def report() -> dict:
         "trace_events": len(_tracer.events),
         "trace_dropped": _tracer.dropped,
     }
+    if _signal_bus is not None:
+        out["signals"] = _signal_bus.report()
+    return out
 
 
 def dump_trace(path: str) -> str:
@@ -168,6 +206,8 @@ def dump_trace(path: str) -> str:
 
 
 def reset() -> None:
-    """Clear all recorded state (metrics, spans, decisions)."""
+    """Clear all recorded state (metrics, spans, decisions, signals)."""
+    global _signal_bus
     _registry.reset()
     _tracer.reset()
+    _signal_bus = None

@@ -1,0 +1,109 @@
+"""Locality profiling: the cache-behavior statistics the paper's thesis
+turns on, measured instead of assumed.
+
+GastCoCo argues cache misses — not instruction count — dominate dynamic
+graph processing: a CBList sweep's cost tracks how many *blocks* it
+touches per edge and how deep the per-vertex chains it must hop.  The obs
+layer so far timed phases but never measured that; this module computes,
+per sweep, the three statistics that proxy the paper's cache-miss profile:
+
+  * **delta chain hops** — blocks per live vertex chain (``v_level``):
+    mean and max.  Every hop past the first is a dependent fetch the
+    pipeline can't hide without prefetch (the quantity the paper's
+    coroutine schedule exists to cover);
+  * **run-vs-delta lane mix** — the fraction of live edges served by the
+    sealed CSR tier vs the mutable delta.  CSR lanes are contiguous
+    (one stream), delta lanes chase chains — the mix *is* the expected
+    cache behavior of a tiered sweep;
+  * **blocks-touched-per-edge** — total blocks a full sweep visits
+    divided by live edges; the direct cache-miss proxy (1/block_width is
+    the dense ideal, values near 1.0 mean one fetch per edge — pointer
+    chasing).
+
+Everything is host-side arithmetic over one jitted reduction (a handful of
+scalars per call), gated behind ``REPRO_OBS`` by the callers — cheap
+enough to stay on for every sweep when observability is enabled, and
+**jit-honest**: profiles are taken outside jit at the program entry point
+(:func:`repro.core.program.run_program`), never inside a traced sweep.
+
+The recorded ``locality.contiguity`` gauge doubles as the signal bus's
+``sweep_contiguity`` source, which feeds the tuner's P_h statistic — the
+measured-locality-to-plan loop the ROADMAP asks for.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit)
+def _chain_stats(v_level: jax.Array, v_deg: jax.Array):
+    """(chain blocks total, max chain depth, live vertices, live edges) in
+    one device round-trip."""
+    live = v_deg > 0
+    lvl = jnp.where(live, v_level, 0)
+    return (lvl.sum(), lvl.max(), live.sum(), v_deg.sum())
+
+
+def sweep_profile(storage) -> dict:
+    """Locality statistics of one sweep over ``storage`` (CBList,
+    ShardedCBList, or TieredGraph) as a flat host-side dict."""
+    from repro.core import blockstore as bs
+    from repro.core.cblist import CBList
+    from repro.core.tiered import TieredGraph
+
+    run_edges = 0.0
+    block_width = storage.block_width
+    if isinstance(storage, TieredGraph):
+        delta = storage.delta
+        run_edges = float(storage.runs.num_edges.sum())
+    else:
+        delta = storage
+    blocks, hops_max, n_live, delta_edges = (
+        float(x) for x in jax.device_get(
+            _chain_stats(delta.v_level, delta.v_deg)))
+    if isinstance(delta, CBList):
+        contiguity = float(bs.gtchain_contiguity(delta.store))
+    else:
+        from repro.distributed.graph import shard_contiguity
+        contiguity = float(shard_contiguity(delta))
+
+    edges = delta_edges + run_edges
+    # the sealed tier is one contiguous stream: ceil(lanes / width) blocks
+    run_blocks = -(-run_edges // block_width) if run_edges else 0.0
+    return {
+        "chain_hops_mean": blocks / n_live if n_live else 0.0,
+        "chain_hops_max": hops_max,
+        "delta_lane_fraction": delta_edges / edges if edges else 0.0,
+        "run_lane_fraction": run_edges / edges if edges else 0.0,
+        "blocks_per_edge": (blocks + run_blocks) / edges if edges else 0.0,
+        "contiguity": contiguity,
+        "live_vertices": n_live,
+        "live_edges": edges,
+    }
+
+
+# gauges a profile refreshes (the bounded, fixed label-free set)
+_GAUGE_KEYS = ("chain_hops_mean", "chain_hops_max", "delta_lane_fraction",
+               "run_lane_fraction", "blocks_per_edge", "contiguity")
+
+
+def record_sweep(storage, task: str = "sweep") -> Optional[dict]:
+    """Profile ``storage`` and publish the statistics as ``locality.*``
+    gauges plus a ``locality.sweeps{task=...}`` counter.
+
+    Returns the profile dict, or None when observability is disabled (the
+    disabled path is the standard one flag check — no device work, no
+    reduction, nothing)."""
+    import repro.obs as obs
+    if not obs.enabled():
+        return None
+    prof = sweep_profile(storage)
+    reg = obs.registry()
+    for key in _GAUGE_KEYS:
+        reg.gauge(f"locality.{key}").set(prof[key])
+    reg.counter("locality.sweeps", task=str(task)).inc()
+    return prof

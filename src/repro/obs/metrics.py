@@ -40,6 +40,39 @@ from typing import Dict, Iterable, List, Optional, Tuple
 # for lane counts — callers pass their own edges when the unit differs)
 DEFAULT_BUCKETS = (1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0)
 
+
+def log_buckets(lo: float = 1e-5, hi: float = 10.0,
+                per_decade: int = 3) -> Tuple[float, ...]:
+    """Log-spaced bucket edges from ``lo`` to at least ``hi`` with
+    ``per_decade`` edges per decade (1-2-5 style at the default 3).
+
+    DEFAULT_BUCKETS is one edge per decade — fine for order-of-magnitude
+    attribution, too coarse for latency distributions where the p50/p99
+    spread of one phase lives inside a single decade.
+    """
+    if lo <= 0 or hi <= lo:
+        raise ValueError(f"need 0 < lo < hi, got lo={lo} hi={hi}")
+    per_decade = max(1, int(per_decade))
+    edges = []
+    exp = math.floor(math.log10(lo))
+    step = 1.0 / per_decade
+    k = 0
+    while True:
+        edge = 10.0 ** (exp + k * step)
+        # snap to a clean mantissa so edge labels stay readable
+        edge = float(f"{edge:.3g}")
+        if edge >= lo or abs(edge - lo) < 1e-12 * lo:
+            edges.append(edge)
+        if edge >= hi:
+            break
+        k += 1
+    return tuple(edges)
+
+
+# latency-oriented preset: 10us .. 10s, 3 edges per decade — the ladder the
+# flush-phase and serve-latency histograms share
+LATENCY_BUCKETS_S = log_buckets(1e-5, 10.0, 3)
+
 # how many raw values a Series retains for percentile computation
 DEFAULT_SERIES_WINDOW = 8192
 
@@ -189,6 +222,11 @@ class Series:
         out["sum"] = self.sum
         if self.count:
             out["mean"] = self.sum / self.count
+        # window bookkeeping: percentiles above are over window_n of the
+        # most recent samples (capacity window_cap), so bounded-window
+        # statistics are self-describing
+        out["window_n"] = len(self.window)
+        out["window_cap"] = self.window.maxlen
         return out
 
     def snapshot(self) -> dict:
@@ -284,27 +322,38 @@ class Registry:
         self._decision_seq = 0
 
 
+def _monotone_delta(cur: float, prev: float) -> float:
+    """``cur - prev`` with counter-reset detection: a monotone value lower
+    than its predecessor means the registry was reset between snapshots
+    (``Registry.reset()``), so the whole current value is the increment —
+    the Prometheus rate() convention."""
+    return cur if cur < prev else cur - prev
+
+
 def delta(cur: dict, prev: dict) -> dict:
     """Difference of two registry snapshots' monotone parts.
 
     Counters subtract; histograms subtract count/sum/buckets; gauges and
     series report their current value (levels and reservoirs have no
-    meaningful subtraction).
+    meaningful subtraction).  A ``Registry.reset()`` between the two
+    snapshots is detected per-metric (current value below the previous one)
+    and treated as a restart from zero rather than a negative increment.
     """
     out = {"counters": {}, "gauges": dict(cur.get("gauges", {})),
            "histograms": {}, "series": dict(cur.get("series", {}))}
     pc = prev.get("counters", {})
     for k, v in cur.get("counters", {}).items():
-        out["counters"][k] = v - pc.get(k, 0.0)
+        out["counters"][k] = _monotone_delta(v, pc.get(k, 0.0))
     ph = prev.get("histograms", {})
     for k, h in cur.get("histograms", {}).items():
         p = ph.get(k)
-        if p is None:
+        if p is None or h["count"] < p["count"]:
+            # new family, or reset boundary: the histogram restarted
             out["histograms"][k] = h
             continue
         out["histograms"][k] = {
             "count": h["count"] - p["count"], "sum": h["sum"] - p["sum"],
             "min": h["min"], "max": h["max"],
-            "buckets": {e: n - p["buckets"].get(e, 0)
+            "buckets": {e: _monotone_delta(n, p["buckets"].get(e, 0))
                         for e, n in h["buckets"].items()}}
     return out

@@ -148,22 +148,46 @@ class Tracer:
 
     # ---- export -----------------------------------------------------------
 
+    # tid rows in the Chrome export: host dispatch spans and device sync
+    # spans get their own tracks so dispatch-vs-device attribution renders
+    # as parallel timelines instead of overlapping bars on one track
+    _HOST_TID = 0
+    _DEVICE_TID = 1
+
     def to_chrome(self) -> dict:
-        """The ``trace_event`` JSON object (Perfetto/chrome://tracing)."""
+        """The ``trace_event`` JSON object (Perfetto/chrome://tracing).
+
+        ``cat="device"`` spans (from :meth:`wait`) land on their own tid
+        row: a device sync overlaps the host phase that awaits it, and two
+        overlapping ``ph:"X"`` events on one tid render as garbage in
+        Perfetto.  Thread-name metadata labels the two rows.
+        """
         t0 = self._t0 or 0.0
         events = []
         for ev in self.events:
+            tid = (self._DEVICE_TID if ev["cat"] == "device"
+                   else self._HOST_TID)
             out = {"name": ev["name"], "cat": ev["cat"], "ph": ev["ph"],
-                   "ts": (ev["ts"] - t0) * 1e6, "pid": 0, "tid": 0,
+                   "ts": (ev["ts"] - t0) * 1e6, "pid": 0, "tid": tid,
                    "args": ev["args"]}
             if ev["ph"] == "X":
                 out["dur"] = ev["dur"] * 1e6
             else:
                 out["s"] = "t"                      # instant scope: thread
             events.append(out)
-        meta = {"name": "process_name", "ph": "M", "pid": 0, "tid": 0,
-                "args": {"name": "repro.obs"}}
-        return {"traceEvents": [meta] + events, "displayTimeUnit": "ms",
+        meta = [
+            {"name": "process_name", "ph": "M", "pid": 0, "tid": 0,
+             "args": {"name": "repro.obs"}},
+            {"name": "thread_name", "ph": "M", "pid": 0,
+             "tid": self._HOST_TID, "args": {"name": "host dispatch"}},
+            {"name": "thread_name", "ph": "M", "pid": 0,
+             "tid": self._DEVICE_TID, "args": {"name": "device sync"}},
+            {"name": "thread_sort_index", "ph": "M", "pid": 0,
+             "tid": self._HOST_TID, "args": {"sort_index": 0}},
+            {"name": "thread_sort_index", "ph": "M", "pid": 0,
+             "tid": self._DEVICE_TID, "args": {"sort_index": 1}},
+        ]
+        return {"traceEvents": meta + events, "displayTimeUnit": "ms",
                 "otherData": {"dropped_events": self.dropped}}
 
     def dump(self, path: str) -> str:

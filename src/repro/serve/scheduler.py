@@ -58,7 +58,7 @@ import numpy as np
 
 import repro.obs as obs
 from repro.core.tuner import ServePlan, choose_serve_plan
-from repro.obs.metrics import Registry
+from repro.obs.metrics import LATENCY_BUCKETS_S, Registry
 from repro.serve import overlay as ov
 from repro.serve.admission import ADMIT, DEFER, SHED, AdmissionController
 from repro.serve.batcher import JitShapeStat, KindQueue, MicroBatch
@@ -110,7 +110,23 @@ class ServeFrontend:
     def __init__(self, service: GraphService, plan: Optional[ServePlan] = None,
                  *, fanout: Tuple[int, ...] = (15, 10), clock=None,
                  freshness_flush: bool = True,
-                 n_replicas: Optional[int] = None):
+                 n_replicas: Optional[int] = None,
+                 signals=None, slo=None,
+                 retune_interval: Optional[float] = None):
+        """``signals=`` attaches a :class:`repro.obs.SignalBus`: every step
+        ticks the dispatch-cadence signals (arrival QPS, read lanes/s, read
+        pressure per replica), and with ``retune_interval=T`` seconds the
+        frontend periodically re-runs :func:`choose_serve_plan` over the
+        measured signals and resizes the read plane to the adapted
+        ``n_replicas`` — the ROADMAP's measured-read-pressure loop.
+        Existing queues keep their bucket ladders (compile caches stay
+        bounded); the replica resize takes effect immediately.
+
+        ``slo=`` attaches a :class:`repro.obs.SloTracker`: every completion
+        (and shed) is scored against its ``(tenant, class)`` objective,
+        breaches emit edge-triggered ``slo.breach`` decisions, and
+        batch-class submissions are shed while any interactive objective
+        burns its error budget faster than the tracker's threshold."""
         self.service = service
         self.plan = plan or choose_serve_plan(
             100.0, log_capacity=service._log.capacity,
@@ -148,6 +164,12 @@ class ServeFrontend:
         self._completed = 0
         self._interleaved_flushes = 0
         self._version_cache: Optional[Tuple] = None
+        self.signals = signals
+        self.slo = slo
+        self._retune_interval = (None if retune_interval is None
+                                 else float(retune_interval))
+        self._last_retune: Optional[float] = None
+        self._retunes = 0
 
     # ---- tenancy ----------------------------------------------------------
 
@@ -198,6 +220,21 @@ class ServeFrontend:
         span[0] = min(span[0], now)
         self.metrics.counter("serve.submitted", tenant=req.tenant,
                              cls=req.latency_class).inc()
+        # SLO-driven load shedding runs BEFORE token admission (a shed here
+        # must not consume the tenant's budget): while any interactive
+        # objective burns its error budget too fast, batch-class load — the
+        # cheapest to retry — is dropped before interactive p99 burns
+        if self.slo is not None and req.latency_class == "batch" \
+                and self.slo.should_shed_batch():
+            ticket.complete_shed(now)
+            self.metrics.counter("serve.shed", tenant=req.tenant,
+                                 cls=req.latency_class).inc()
+            self.metrics.counter("serve.slo_shed", tenant=req.tenant,
+                                 cls=req.latency_class).inc()
+            obs.instant("serve.slo_shed", cat="serve", tenant=req.tenant,
+                        cls=req.latency_class, lanes=req.size)
+            self._slo_observe(req, shed=True)
+            return ticket
         verdict = self.admission.admit(req.tenant, req.latency_class,
                                        req.size, now)
         if verdict == SHED:
@@ -208,6 +245,7 @@ class ServeFrontend:
                                  cls=req.latency_class).inc(req.size)
             obs.instant("serve.shed", cat="serve", tenant=req.tenant,
                         cls=req.latency_class, lanes=req.size)
+            self._slo_observe(req, shed=True)
             return ticket
         if verdict == DEFER:
             self.admission.on_defer(req.tenant, req.latency_class, req.size)
@@ -293,6 +331,18 @@ class ServeFrontend:
         # 7. collect every read dispatched this step (one device_get per
         #    mega-batch) and complete the tickets
         self._collect(now)
+
+        # 8. signal derivation + periodic retune: tick the dispatch-cadence
+        #    signals, then (on the retune interval) re-plan from measured
+        #    pressure and resize the read plane
+        if self.signals is not None:
+            self.signals.tick_dispatch(now,
+                                       n_replicas=self.read_plane.n_replicas)
+            if self._retune_interval is not None:
+                if self._last_retune is None:
+                    self._last_retune = now
+                elif now - self._last_retune >= self._retune_interval:
+                    self.retune(now)
         return self._completed - done0
 
     def drain(self, flush: bool = False) -> int:
@@ -324,6 +374,32 @@ class ServeFrontend:
         if flush:
             self._flush()
         return self._completed - done0
+
+    def retune(self, now: Optional[float] = None) -> ServePlan:
+        """Re-run :func:`choose_serve_plan` over the measured signals and
+        adopt the adapted plan: the read plane is rebuilt when the measured
+        read pressure calls for a different ``n_replicas`` (the decision
+        log records the firing signal values).  Existing kind queues keep
+        their bucket ladders — compile caches must stay bounded — so the
+        ladder/window parts of the new plan apply to queues created later.
+        """
+        now = float(self.clock()) if now is None else float(now)
+        self._last_retune = now
+        view = self.signals.view() if self.signals is not None else None
+        new_plan = choose_serve_plan(
+            self.plan.arrival_lanes_per_s / 8.0,
+            log_capacity=self.service._log.capacity,
+            high_watermark=self.service._high_watermark,
+            n_replicas=self.read_plane.n_replicas,
+            signals=view)
+        if new_plan.n_replicas != self.read_plane.n_replicas:
+            self.read_plane = ReadPlane(self.service.snapshot,
+                                        new_plan.n_replicas)
+            self.metrics.counter("serve.replica_retunes").inc()
+        self._retunes += 1
+        self.metrics.counter("serve.retunes").inc()
+        self.plan = new_plan
+        return new_plan
 
     def _pump(self, keys, now: float) -> None:
         for key in keys:
@@ -389,6 +465,11 @@ class ServeFrontend:
         self.metrics.series("serve.occupancy", kind=mb.kind).observe(
             mb.occupancy)
         self.metrics.counter("serve.dispatches", kind=mb.kind).inc()
+        if mb.kind in ("point_read", "degree_read", "khop"):
+            # read pressure source: lanes dispatched toward the read plane
+            # (the signal bus derives read_lanes_per_s / read_pressure)
+            self.metrics.counter("serve.read_lanes", kind=mb.kind).inc(
+                mb.lanes)
         with obs.span("serve.dispatch", cat="serve", kind=mb.kind,
                       bucket=mb.bucket, lanes=mb.lanes, overlay=overlay):
             if mb.kind == "update":
@@ -607,9 +688,26 @@ class ServeFrontend:
         req = ticket.request
         self.metrics.series("serve.latency_s", tenant=req.tenant,
                             cls=req.latency_class).observe(ticket.latency)
+        self.metrics.histogram("serve.latency_hist_s", LATENCY_BUCKETS_S,
+                               cls=req.latency_class).observe(ticket.latency)
         self.metrics.counter("serve.completed", tenant=req.tenant).inc()
         span = self._tenant_span.setdefault(req.tenant, [ticket.t_arrival, now])
         span[1] = max(span[1], now)
+        self._slo_observe(req, latency_s=ticket.latency)
+
+    def _slo_observe(self, req: Request, latency_s: Optional[float] = None,
+                     shed: bool = False) -> None:
+        """Score one outcome against its SLO objective; a crossing into
+        breach emits the edge-triggered ``slo.breach`` event (structured
+        decision + counter)."""
+        if self.slo is None:
+            return
+        breach = self.slo.observe(req.tenant, req.latency_class,
+                                  latency_s=latency_s, shed=shed)
+        if breach is not None:
+            self.metrics.counter("slo.breach", tenant=req.tenant,
+                                 cls=req.latency_class).inc()
+            obs.decision("slo.breach", **breach)
 
     # ---- stats ------------------------------------------------------------
 
@@ -670,10 +768,14 @@ class ServeFrontend:
             "read_plane": {
                 "n_replicas": self.read_plane.n_replicas,
                 "dispatches_by_replica": replica_dispatches,
+                "retunes": self._retunes,
             },
             "service": {"epoch": self.service.epoch,
                         "flushes": svc.flushes,
                         "interleaved_flushes": self._interleaved_flushes,
                         "flush_in_flight": self.service.flush_in_flight,
                         "pending_updates": self.service.pending_updates},
+            "slo": self.slo.summary() if self.slo is not None else {},
+            "signals": (self.signals.report()
+                        if self.signals is not None else {}),
         }

@@ -45,6 +45,16 @@ from repro.core.blockstore import NULL
 from repro.core.cblist import CBList, block_fences, compact_cbl, grow, rebuild
 
 
+# churn-adaptation knobs for MaintenancePolicy.adapted(): the seal threshold
+# K doubles while the measured unseal-churn ratio (unseals per seal, i.e.
+# the fraction of sealed vertices that writes immediately pull back through
+# a 72ms repartition) exceeds the target, capped at CHURN_ADAPT_CAP × base K
+SEAL_CHURN_TARGET = 0.25
+CHURN_ADAPT_CAP = 8
+# windowed samples required before churn adaptation fires
+MIN_CHURN_SAMPLES = 3
+
+
 @dataclasses.dataclass(frozen=True)
 class MaintenancePolicy:
     contiguity_floor: float = 0.85    # P_h below this -> compact
@@ -62,6 +72,46 @@ class MaintenancePolicy:
     stats_period: int = 1             # post-flush full decide every N flushes
                                       # (others run headroom-only; 1 = every
                                       # flush, the pre-existing behavior)
+
+    def adapted(self, signals) -> "MaintenancePolicy":
+        """This policy with the seal threshold K adapted from measured
+        unseal churn (an :class:`repro.obs.SignalView`).
+
+        A high ``unseal_churn`` / ``seal_rate`` ratio means K is too eager:
+        vertices get sealed and immediately pulled back into the delta by
+        writes, paying a ~72ms repartition each way.  K doubles per factor
+        the ratio sits above :data:`SEAL_CHURN_TARGET` (doubling K roughly
+        halves the thrash set), capped at :data:`CHURN_ADAPT_CAP` × base.
+        Stateless: the adaptation reads the windowed signals fresh each
+        call, so a subsiding churn window naturally relaxes K back toward
+        the base policy.  Returns ``self`` unchanged when there is no
+        usable signal — the static-policy path stays bit-identical.
+        """
+        if signals is None or self.seal_after_epochs is None:
+            return self
+        churn = signals.get("unseal_churn")
+        if churn is None or churn.n < MIN_CHURN_SAMPLES:
+            return self
+        seals = signals.get("seal_rate")
+        per_seal = churn.mean / max(seals.mean if seals else 1.0, 1.0)
+        mult, ratio = 1, per_seal
+        while ratio > SEAL_CHURN_TARGET and mult < CHURN_ADAPT_CAP:
+            mult *= 2
+            ratio /= 2.0
+        if mult == 1:
+            return self
+        k = int(self.seal_after_epochs * mult)
+        obs.decision(
+            "maintenance.adapt_seal", base_k=self.seal_after_epochs,
+            adapted_k=k, multiplier=mult,
+            unseal_churn_mean=round(churn.mean, 4),
+            unseal_churn_last=round(churn.last, 4), churn_n=churn.n,
+            seal_rate_mean=round(seals.mean, 4) if seals else None,
+            churn_per_seal=round(per_seal, 4),
+            rule=f"unseal churn per seal {per_seal:.2f} above target "
+                 f"{SEAL_CHURN_TARGET:g}: double K per excess factor "
+                 f"(cap {CHURN_ADAPT_CAP}x)")
+        return dataclasses.replace(self, seal_after_epochs=k)
 
 
 class MaintenanceAction(NamedTuple):
@@ -93,7 +143,7 @@ def chain_overlap_fraction(cbl: CBList) -> jax.Array:
 
 def decide(cbl, pending_inserts: int = 0,
            policy: MaintenancePolicy = MaintenancePolicy(),
-           headroom_only: bool = False) -> MaintenanceAction:
+           headroom_only: bool = False, signals=None) -> MaintenanceAction:
     """Pick the maintenance action for the current storage state.
 
     ``pending_inserts`` is the log's pending insert count — worst case every
@@ -116,7 +166,13 @@ def decide(cbl, pending_inserts: int = 0,
     "proactive" for the headroom-only pre-flush call, "full" for the
     post-apply decision) plus a decide span — the accounting the churn
     tests assert on.
+
+    ``signals`` (an :class:`repro.obs.SignalView`) adapts the policy's
+    seal threshold from measured unseal churn before deciding — see
+    :meth:`MaintenancePolicy.adapted`; ``None`` keeps the static policy.
     """
+    if signals is not None:
+        policy = policy.adapted(signals)
     phase = "proactive" if headroom_only else "full"
     with obs.span("maint.decide", cat="maint", phase=phase):
         action = _decide(cbl, pending_inserts, policy, headroom_only)

@@ -158,7 +158,8 @@ class GraphService:
                  probe: Optional[SystemProbe] = None,
                  auto_flush: bool = True,
                  n_shards: int = 1, mesh=None,
-                 seal_after_epochs: Optional[int] = None):
+                 seal_after_epochs: Optional[int] = None,
+                 signals=None):
         """``n_shards > 1`` splits storage into GTChain-balanced shards on a
         device mesh (:func:`repro.distributed.graph.shard_cbl`): flushes
         route updates to owning shards, maintenance runs per shard, and
@@ -170,7 +171,15 @@ class GraphService:
         :class:`~repro.core.tiered.TieredGraph`, and maintenance seals
         vertices unwritten for K flushes into the immutable CSR run —
         sweeps and point reads then pay CSR prices for the cold bulk.  A
-        write touching a sealed vertex unseals it transparently."""
+        write touching a sealed vertex unseals it transparently.
+
+        ``signals=`` attaches a :class:`repro.obs.SignalBus`: every flush
+        ticks the bus (unseal churn, seal rate, shard skew, sweep
+        contiguity), and the post-apply maintenance decision runs under a
+        churn-adapted policy (:meth:`MaintenancePolicy.adapted`) — the
+        closed loop that stops write-heavy vertices thrashing through
+        seal/unseal repartitions.  ``None`` (the default) keeps the static
+        policy, bit-identical to previous behavior."""
         from repro.core.tiered import TieredGraph
         if isinstance(cbl, CBList):
             if n_shards > 1:
@@ -195,6 +204,7 @@ class GraphService:
         self._policy = policy
         self._probe = probe
         self._auto_flush = auto_flush
+        self._signals = signals
         self.stats = ServiceStats()
         # analytics cache: (name, source) -> (epoch, delete_count, kw, result)
         self._cache: Dict[Tuple, Tuple[int, int, dict, jax.Array]] = {}
@@ -381,12 +391,14 @@ class GraphService:
             return self._finish()
 
     def _begin(self) -> None:
-        with obs.span("flush.admission", cat="flush"):
+        with obs.span("flush.admission", cat="flush") as adm_rec:
             self._log, (s, d, w, op, valid) = ulog.drain(self._log)
             watermark = int(self._log.head)
+        obs.histogram("flush.phase_s", obs.LATENCY_BUCKETS_S,
+                      phase="admission").observe(adm_rec.get("dur", 0.0))
         cbl = self._snap.cbl
 
-        with obs.span("flush.coalesce", cat="flush"):
+        with obs.span("flush.coalesce", cat="flush") as coal_rec:
             # cross-append coalescing: the drained stream is FIFO, the last
             # op per key is the net effect (append only coalesces within one
             # batch)
@@ -404,6 +416,8 @@ class GraphService:
                 net_deletes = int((del_keys & found).sum())
             else:
                 net_deletes = 0
+        obs.histogram("flush.phase_s", obs.LATENCY_BUCKETS_S,
+                      phase="coalesce").observe(coal_rec.get("dur", 0.0))
         obs.counter("flush.pending_inserts").inc(n_ins)
         obs.counter("flush.net_deletes").inc(net_deletes)
 
@@ -483,14 +497,19 @@ class GraphService:
         # post-apply maintenance (fragmentation repair / cold-vertex seal);
         # policy.stats_period > 1 amortizes the full fragmentation scans —
         # off-cycle flushes run the headroom-only decide (capacity checks
-        # never skip a flush, only the repair statistics do)
-        with obs.span("flush.maintenance", cat="flush"):
-            period = max(1, int(getattr(self._policy, "stats_period", 1)))
+        # never skip a flush, only the repair statistics do).  With a
+        # signal bus attached the policy is churn-adapted first, and decide
+        # and apply both run under the same adapted K.
+        with obs.span("flush.maintenance", cat="flush") as maint_rec:
+            policy = self._policy
+            if self._signals is not None:
+                policy = policy.adapted(self._signals.view())
+            period = max(1, int(getattr(policy, "stats_period", 1)))
             off_cycle = (self.stats.flushes + 1) % period != 0
-            action = maint.decide(cbl, pending_inserts=0, policy=self._policy,
+            action = maint.decide(cbl, pending_inserts=0, policy=policy,
                                   headroom_only=off_cycle)
             if action.kind in ("compact", "rebuild", "grow", "seal"):
-                cbl = maint.apply_action(cbl, action, self._policy)
+                cbl = maint.apply_action(cbl, action, policy)
                 if action.kind == "compact":
                     self.stats.compacts += 1
                 elif action.kind == "rebuild":
@@ -499,6 +518,8 @@ class GraphService:
                     self.stats.seals += 1
                 else:
                     self.stats.grows += 1
+        obs.histogram("flush.phase_s", obs.LATENCY_BUCKETS_S,
+                      phase="maintenance").observe(maint_rec.get("dur", 0.0))
 
         self._snap = snap.advance(self._snap, cbl, watermark)
         self.stats.flushes += 1
@@ -509,6 +530,10 @@ class GraphService:
         obs.counter("flush.count").inc()
         obs.counter("flush.applied_inserts").inc(int(ustats.applied_inserts))
         obs.gauge("service.epoch").set(int(self._snap.epoch))
+        if self._signals is not None:
+            # flush-cadence signal derivation, after this flush's counters
+            # (flush.count, seal/unseal churn, shard skew) have landed
+            self._signals.tick_flush()
         return FlushReport(epoch=int(self._snap.epoch), watermark=watermark,
                            applied_inserts=int(ustats.applied_inserts),
                            applied_deletes=net_deletes,
@@ -588,8 +613,11 @@ class GraphService:
     def plan(self, task="scan_all"):
         """The tuner's current execution plan for a task or program
         (introspection; accepts a task string, program name, or
-        VertexProgram)."""
+        VertexProgram).  With a signal bus attached the plan sees the
+        measured signals (contiguity, unseal churn)."""
         if isinstance(task, str) and (task in self._programs
                                       or has_program(task)):
             task = self._resolve_program(task)
-        return choose_plan(self._snap.cbl, task, self._probe)
+        signals = self._signals.view() if self._signals is not None else None
+        return choose_plan(self._snap.cbl, task, self._probe,
+                           signals=signals, policy=self._policy)

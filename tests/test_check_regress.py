@@ -1,0 +1,139 @@
+"""benchmarks/check_regress.py: the perf-regression gate must stay green on
+identical dumps, fail on a regressed timing row or guard-floor violation,
+and skip (loudly, not silently) what it cannot compare."""
+import copy
+import json
+import os
+
+import pytest
+
+from benchmarks.check_regress import main
+
+SHARD = {
+    "bench": "bench_shard",
+    "meta": {"schema": 1, "bench_scale": 1.0},
+    "rows": [
+        {"name": "shard/sweep_s1", "us_per_call": 1000.0, "derived": ""},
+        {"name": "shard/sweep_s2", "us_per_call": 600.0, "derived": ""},
+    ],
+    "summary": {"write_scaling_2s": 5.0, "write_guard": 0.6},
+}
+
+SERVE = {
+    "bench": "bench_serve",
+    "meta": {"schema": 1, "bench_scale": 1.0},
+    "rows": [
+        {"name": "serve/point_read", "us_per_call": 200.0, "derived": ""},
+    ],
+    "summary": {
+        "point_read_speedup_batched_vs_loop": 7.0,
+        "replica_curve": {"sequential": {"read_qps": 100.0},
+                          "2": {"speedup_vs_sequential": 1.8}},
+        "read_guard": 1.5,
+    },
+}
+
+
+def dump(d, *benches):
+    os.makedirs(d, exist_ok=True)
+    for short, doc in benches:
+        with open(os.path.join(d, f"BENCH_{short}.json"), "w") as f:
+            json.dump(doc, f)
+    return str(d)
+
+
+@pytest.fixture(autouse=True)
+def no_guard_env(monkeypatch):
+    monkeypatch.delenv("REPRO_SHARD_WRITE_GUARD", raising=False)
+    monkeypatch.delenv("REPRO_SERVE_READ_GUARD", raising=False)
+
+
+def test_green_on_identical(tmp_path):
+    fresh = dump(tmp_path / "a", ("shard", SHARD), ("serve", SERVE))
+    base = dump(tmp_path / "b", ("shard", SHARD), ("serve", SERVE))
+    assert main(["--fresh", fresh, "--baseline", base]) == 0
+
+
+def test_regressed_timing_row_fails(tmp_path):
+    bad = copy.deepcopy(SHARD)
+    bad["rows"][0]["us_per_call"] *= 10
+    fresh = dump(tmp_path / "a", ("shard", bad))
+    base = dump(tmp_path / "b", ("shard", SHARD))
+    assert main(["--fresh", fresh, "--baseline", base]) == 1
+
+
+def test_within_tolerance_passes(tmp_path):
+    ok = copy.deepcopy(SHARD)
+    ok["rows"][0]["us_per_call"] *= 1.5   # inside default 1.0 slack
+    fresh = dump(tmp_path / "a", ("shard", ok))
+    base = dump(tmp_path / "b", ("shard", SHARD))
+    assert main(["--fresh", fresh, "--baseline", base]) == 0
+    # the same drift fails under a tightened tolerance
+    assert main(["--fresh", fresh, "--baseline", base,
+                 "--tolerance", "0.1"]) == 1
+
+
+def test_guard_floor_violation_fails(tmp_path):
+    bad = copy.deepcopy(SHARD)
+    bad["summary"]["write_scaling_2s"] = 0.3   # below recorded 0.6 floor
+    fresh = dump(tmp_path / "a", ("shard", bad))
+    base = dump(tmp_path / "b", ("shard", SHARD))
+    assert main(["--fresh", fresh, "--baseline", base]) == 1
+
+
+def test_guard_env_overrides_recorded_floor(tmp_path, monkeypatch):
+    doc = copy.deepcopy(SHARD)
+    doc["summary"]["write_scaling_2s"] = 0.9   # above 0.6, below 2.0
+    fresh = dump(tmp_path / "a", ("shard", doc))
+    base = dump(tmp_path / "b", ("shard", doc))
+    assert main(["--fresh", fresh, "--baseline", base]) == 0
+    monkeypatch.setenv("REPRO_SHARD_WRITE_GUARD", "2.0")
+    assert main(["--fresh", fresh, "--baseline", base]) == 1
+
+
+def test_read_guard_skip_marker_waives_replica_checks(tmp_path, capsys):
+    doc = copy.deepcopy(SERVE)
+    doc["summary"]["read_guard_skipped"] = "devices=8, cores=1"
+    doc["summary"]["replica_curve"]["2"]["speedup_vs_sequential"] = 0.1
+    fresh = dump(tmp_path / "a", ("serve", doc))
+    base = dump(tmp_path / "b", ("serve", SERVE))
+    assert main(["--fresh", fresh, "--baseline", base]) == 0
+    assert "skip" in capsys.readouterr().out
+
+
+def test_ratio_metric_regression_fails(tmp_path):
+    bad = copy.deepcopy(SERVE)
+    bad["summary"]["point_read_speedup_batched_vs_loop"] = 1.0   # from 7.0
+    fresh = dump(tmp_path / "a", ("serve", bad))
+    base = dump(tmp_path / "b", ("serve", SERVE))
+    assert main(["--fresh", fresh, "--baseline", base]) == 1
+
+
+def test_scale_mismatch_skips_baseline_relative_checks(tmp_path, capsys):
+    scaled = copy.deepcopy(SHARD)
+    scaled["meta"]["bench_scale"] = 0.25
+    scaled["rows"][0]["us_per_call"] *= 50    # not comparable, not gated
+    scaled["summary"]["write_scaling_2s"] = 0.8   # still above the floor
+    fresh = dump(tmp_path / "a", ("shard", scaled))
+    base = dump(tmp_path / "b", ("shard", SHARD))
+    assert main(["--fresh", fresh, "--baseline", base]) == 0
+    assert "scale 0.25" in capsys.readouterr().out
+    # the guard floor still fires across scales
+    scaled["summary"]["write_scaling_2s"] = 0.1
+    fresh = dump(tmp_path / "a", ("shard", scaled))
+    assert main(["--fresh", fresh, "--baseline", base]) == 1
+
+
+def test_missing_baseline_skips_and_no_fresh_errors(tmp_path, capsys):
+    fresh = dump(tmp_path / "a", ("shard", SHARD))
+    empty = tmp_path / "b"
+    empty.mkdir()
+    assert main(["--fresh", fresh, "--baseline", str(empty)]) == 0
+    assert "no baseline" in capsys.readouterr().out
+    assert main(["--fresh", str(empty)]) == 2
+
+
+def test_committed_baselines_green():
+    """The repo's own committed BENCH files must pass their own gate."""
+    assert main(["--fresh", ".", "--baseline", "git:HEAD",
+                 "--bench", "shard", "serve"]) == 0

@@ -4,9 +4,10 @@ import json
 import pytest
 
 import repro.obs as obs
-from repro.obs.metrics import (Registry, count_bucket, delta,
-                               guarded_percentiles, percentile_min_n)
-from repro.obs.trace import Tracer
+from repro.obs.metrics import (LATENCY_BUCKETS_S, NULL, Registry,
+                               count_bucket, delta, guarded_percentiles,
+                               log_buckets, percentile_min_n)
+from repro.obs.trace import NULL_SPAN, Tracer
 
 
 @pytest.fixture
@@ -238,3 +239,100 @@ def test_dump_trace_roundtrip(live_obs, tmp_path):
     doc = json.loads(open(p).read())
     names = [e["name"] for e in doc["traceEvents"]]
     assert "root" in names and "inside" in names
+
+
+# ---- ISSUE 10 satellites ---------------------------------------------------
+
+def test_log_buckets_preset():
+    edges = log_buckets(1e-5, 10.0, per_decade=3)
+    assert edges[0] == 1e-5 and edges[-1] == 10.0
+    assert all(a < b for a, b in zip(edges, edges[1:]))   # strictly monotone
+    # ~3 per decade over 6 decades
+    assert 17 <= len(edges) <= 20
+    assert LATENCY_BUCKETS_S == edges                     # the shared preset
+    # ratio between consecutive edges is ~10^(1/3)
+    for a, b in zip(edges, edges[1:]):
+        assert 1.8 < b / a < 2.6
+    with pytest.raises(ValueError):
+        log_buckets(0.0, 1.0)
+    with pytest.raises(ValueError):
+        log_buckets(1.0, 0.5)
+
+
+def test_series_summary_reports_window():
+    r = Registry()
+    s = r.series("lat", maxlen=16)
+    for i in range(40):
+        s.observe(float(i))
+    summ = s.summary()
+    assert summ["window_n"] == 16 and summ["window_cap"] == 16
+    assert r.series("other").summary()["window_n"] == 0
+
+
+def test_guarded_percentiles_exact_thresholds():
+    # p50 needs exactly 2 samples, p99 exactly 100
+    assert "p50" not in guarded_percentiles([1.0], pcts=(50,))
+    assert "p50" in guarded_percentiles([1.0, 2.0], pcts=(50,))
+    assert "p99" not in guarded_percentiles(range(99), pcts=(99,))
+    out = guarded_percentiles(range(100), pcts=(99,))
+    assert out["p99"] == 98       # nearest-rank on 0..99
+
+
+def test_delta_across_registry_reset():
+    r = Registry()
+    r.counter("c").inc(100)
+    r.histogram("h", buckets=(1.0,)).observe(0.5)
+    r.histogram("h", buckets=(1.0,)).observe(2.0)
+    prev = r.snapshot()
+    r.reset()
+    r.counter("c").inc(3)
+    r.histogram("h", buckets=(1.0,)).observe(0.2)
+    d = delta(r.snapshot(), prev)
+    # a counter below its previous value restarted: delta is the new value,
+    # never negative
+    assert d["counters"]["c"] == 3
+    assert d["histograms"]["h"]["count"] == 1
+    assert d["histograms"]["h"]["buckets"] == {"le_1": 1, "le_inf": 0}
+
+
+def test_disabled_facade_shares_noop_objects():
+    """Disabled overhead is one flag check: every metric call returns THE
+    shared null object (no allocation), every span THE shared null span."""
+    was = obs.enabled()
+    obs.disable()
+    try:
+        assert obs.counter("a") is NULL
+        assert obs.counter("b", shard=3) is NULL
+        assert obs.gauge("g") is NULL
+        assert obs.series("s") is NULL
+        assert obs.histogram("h", buckets=(1.0,)) is NULL
+        with obs.span("x") as sp:
+            pass
+        with obs.span("y", cat="flush") as sp2:
+            pass
+        assert sp is NULL_SPAN and sp2 is NULL_SPAN
+        # the null objects absorb the full metric/span surface
+        NULL.inc(); NULL.set(1.0); NULL.observe(2.0)
+        assert NULL_SPAN.get("dur", 0.0) == 0.0
+    finally:
+        obs.enable(was)
+        obs.reset()
+
+
+def test_chrome_export_separates_device_tid(tmp_path):
+    tr, t = _manual_tracer()
+    with tr.span("host_work", cat="flush"):
+        t["now"] += 0.001
+    tr.instant("sync_done", cat="device")
+    with tr.span("dev_wait", cat="device"):
+        t["now"] += 0.002
+    doc = tr.to_chrome()
+    by_name = {e["name"]: e for e in doc["traceEvents"]
+               if e.get("ph") in ("X", "i")}
+    assert by_name["host_work"]["tid"] != by_name["dev_wait"]["tid"]
+    assert by_name["sync_done"]["tid"] == by_name["dev_wait"]["tid"]
+    # named thread rows so Perfetto labels them
+    threads = {e["args"]["name"]: e["tid"] for e in doc["traceEvents"]
+               if e.get("name") == "thread_name"}
+    assert threads == {"host dispatch": by_name["host_work"]["tid"],
+                       "device sync": by_name["dev_wait"]["tid"]}
